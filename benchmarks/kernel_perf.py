@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks + analytic rooflines (CPU timings are for the
+jnp paths; the Pallas kernels' TPU roofline terms are derived analytically
+from block shapes -- see EXPERIMENTS.md §Roofline for the hardware model).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.pruning import ref as prune_ref
+from repro.kernels.zorder import ref as z_ref
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+
+
+def _time(f, *args, iters=5):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(quick: bool = False) -> List[str]:
+    rows: List[str] = []
+    # Pruning matrix: Q x P x C interval-overlap (paper's eval_skipped).
+    Q, P, C = (2048, 512, 32) if not quick else (512, 128, 16)
+    rng = np.random.default_rng(0)
+    q_lo = jnp.asarray(rng.uniform(0, 1, (Q, C)), jnp.float32)
+    q_hi = q_lo + 0.2
+    p_min = jnp.asarray(rng.uniform(0, 1, (P, C)), jnp.float32)
+    p_max = p_min + 0.2
+    f = jax.jit(prune_ref.scan_matrix)
+    s = _time(f, q_lo, q_hi, p_min, p_max)
+    flops = 4.0 * Q * P * C                   # 2 cmp + 1 and + reduce
+    bytes_ = 4.0 * (Q * C * 2 + P * C * 2 + Q * P)
+    ai = flops / bytes_
+    tpu_bound_us = max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6
+    rows.append(common.csv_row(
+        f"kernel.pruning.{Q}x{P}x{C}", s * 1e6,
+        f"flops={flops:.2e};bytes={bytes_:.2e};arith_intensity={ai:.2f};"
+        f"tpu_roofline_us={tpu_bound_us:.1f};bound=memory"))
+
+    # Z-order keys.
+    N, m, bits = (1_000_000, 3, 10) if not quick else (100_000, 3, 10)
+    vals = jnp.asarray(rng.uniform(0, 1, (N, m)), jnp.float32)
+    lo = vals.min(0)
+    hi = vals.max(0)
+    f = jax.jit(lambda v: z_ref.zorder_keys(v, lo, hi, bits))
+    s = _time(f, vals)
+    bytes_ = 4.0 * N * m + 4.0 * N
+    ops = float(N * m * bits * 3)
+    rows.append(common.csv_row(
+        f"kernel.zorder.{N}x{m}", s * 1e6,
+        f"int_ops={ops:.2e};bytes={bytes_:.2e};"
+        f"tpu_roofline_us={bytes_ / HBM_BW * 1e6:.1f};bound=memory"))
+
+    # Flash attention jnp path (CPU) + analytic TPU roofline.
+    B, H, T, dh = (1, 8, 1024, 64) if quick else (2, 8, 2048, 64)
+    from repro.models import layers as L
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, dh), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, dh), jnp.float32)
+    f = jax.jit(lambda a, b, c: L.flash_attention(a, b, c, causal=True))
+    s = _time(f, q, k, v, iters=3)
+    flops = 4.0 * B * H * T * T * dh / 2      # causal halves the work
+    bytes_ = 2.0 * (3 * B * T * H * dh + B * T * H * dh)
+    rows.append(common.csv_row(
+        f"kernel.flash_attention.{B}x{H}x{T}x{dh}", s * 1e6,
+        f"flops={flops:.2e};bytes={bytes_:.2e};"
+        f"tpu_roofline_us={max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6:.1f};"
+        f"bound=compute"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks query
+counts ~4x for smoke runs; the full run reproduces the paper's Fig. 3/4/5/6
+and Tables I/II at reduced (documented) scale plus kernel rooflines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig3,table1")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (appendix_multicopy, fig3_end_to_end,
+                            fig4_gap_to_optimal, fig5_alpha_sweep,
+                            fig6_epsilon_sweep, kernel_perf, table1_alpha,
+                            table2_ablations)
+    suites = {
+        "fig3": fig3_end_to_end.run,
+        "fig4": fig4_gap_to_optimal.run,
+        "fig5": fig5_alpha_sweep.run,
+        "fig6": fig6_epsilon_sweep.run,
+        "table1": table1_alpha.run,
+        "table2": table2_ablations.run,
+        "appendixD": appendix_multicopy.run,
+        "kernels": kernel_perf.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            for row in fn(quick=args.quick):
+                print(row, flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # keep the suite going; record the failure
+            import traceback
+            traceback.print_exc()
+            print(f"{name}.FAILED,0,error={type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: OREO (online data-layout reorganization with worst-case
+guarantees) integrated as the data-pipeline layout optimizer of a
+production-grade multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+"""Architecture and shape configuration registry."""
+from repro.configs.base import (SHAPES, ArchConfig, MoEConfig, ShapeConfig,
+                                SSMConfig, get_arch, list_archs,
+                                runnable_cells, skipped_cells)
+
+__all__ = ["SHAPES", "ArchConfig", "MoEConfig", "ShapeConfig", "SSMConfig",
+           "get_arch", "list_archs", "runnable_cells", "skipped_cells"]

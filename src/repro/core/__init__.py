@@ -1,0 +1,38 @@
+"""OREO core: online data-layout reorganization with worst-case guarantees.
+
+Public API of the paper's contribution:
+
+* :class:`~repro.core.mts.DynamicUMTS` -- D-UMTS decision maker (Alg. 1-4).
+* :class:`~repro.core.layout_manager.LayoutManager` -- candidate generation +
+  ε-admission (Alg. 5).
+* :class:`~repro.core.oreo.OreoRunner` -- the full online loop (Fig. 1).
+* Layout generators: Qd-tree, Z-order, default (arrival-order).
+* Baselines: Static / Greedy / Regret / MTS-Optimal / Offline-Optimal.
+"""
+from repro.core import baselines, cost_model, layout_manager, layouts
+from repro.core import mts, oreo, predictors, qdtree, sampling, workload, zorder
+from repro.core.cost_model import CostModel
+from repro.core.layout_manager import LayoutManager, LayoutManagerConfig, make_generator
+from repro.core.layouts import (Layout, PartitionMetadata, cost_vector,
+                                eval_cost, eval_skipped, layout_distance,
+                                metadata_from_assignment, partitions_scanned)
+from repro.core.mts import DynamicUMTS, theorem_iv1_bound, theorem_iv2_bound
+from repro.core.oreo import OreoConfig, OreoRunner, RunResult
+from repro.core.qdtree import build_default_layout, build_qdtree_layout
+from repro.core.workload import (Query, QueryTemplate, WorkloadStream,
+                                 generate_workload, make_templates,
+                                 stack_queries)
+from repro.core.zorder import build_zorder_layout
+
+__all__ = [
+    "CostModel", "DynamicUMTS", "Layout", "LayoutManager",
+    "LayoutManagerConfig", "OreoConfig", "OreoRunner", "PartitionMetadata",
+    "Query", "QueryTemplate", "RunResult", "WorkloadStream",
+    "build_default_layout", "build_qdtree_layout", "build_zorder_layout",
+    "cost_vector", "eval_cost", "eval_skipped", "generate_workload",
+    "layout_distance", "make_generator", "make_templates",
+    "metadata_from_assignment", "partitions_scanned", "stack_queries",
+    "theorem_iv1_bound", "theorem_iv2_bound",
+    "baselines", "cost_model", "layout_manager", "layouts", "mts", "oreo",
+    "predictors", "qdtree", "sampling", "workload", "zorder",
+]

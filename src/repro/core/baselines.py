@@ -1,0 +1,201 @@
+"""Methods of comparison (paper §VI-A3 and §VI-C).
+
+Online (no workload knowledge, same candidate stream as OREO):
+  * Greedy -- switches to any freshly generated layout that beats the current
+    one on the sliding window, ignoring reorganization cost.
+  * Regret -- switches only once the *cumulative* query-cost saving of a
+    candidate over the current layout exceeds alpha (TASM-style).
+
+Offline (workload knowledge):
+  * Static -- one layout optimized for the entire workload, never switches.
+  * MTS-Optimal -- fixed precomputed state space (best layout per template) +
+    OREO's D-UMTS switching.
+  * Offline-Optimal -- sees the whole stream; switches to each template's best
+    layout exactly at template boundaries (lower bound for online methods).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import cost_model as cm
+from . import layout_manager as lm
+from . import layouts, mts, oreo, predictors, sampling, workload as wl
+
+
+# ---------------------------------------------------------------------------
+# Static
+# ---------------------------------------------------------------------------
+
+def run_static(data: np.ndarray, stream: wl.WorkloadStream,
+               generator: lm.GeneratorFn, alpha: float,
+               target_partitions: int = 32,
+               name: str = "Static") -> oreo.RunResult:
+    layout = generator(0, data, stream.queries, target_partitions)
+    meta = layout.materialize(data)
+    q_lo, q_hi = wl.stack_queries(stream.queries)
+    costs = layouts.eval_cost(meta, q_lo, q_hi)
+    return oreo.RunResult(name=name, alpha=alpha, query_costs=costs,
+                          reorg_indices=[], state_seq=np.zeros(len(stream),
+                                                               dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Greedy / Regret share OREO's candidate generation cadence
+# ---------------------------------------------------------------------------
+
+def run_greedy(data: np.ndarray, stream: wl.WorkloadStream,
+               generator: lm.GeneratorFn, initial_layout: layouts.Layout,
+               alpha: float, mgr_cfg: Optional[lm.LayoutManagerConfig] = None,
+               name: str = "Greedy") -> oreo.RunResult:
+    cfg = mgr_cfg or lm.LayoutManagerConfig()
+    window: sampling.SlidingWindow[wl.Query] = sampling.SlidingWindow(
+        cfg.window_size)
+    current = initial_layout
+    current.materialize(data)
+    next_id = initial_layout.layout_id + 1
+    query_costs, reorg_indices, state_seq = [], [], []
+    for i, q in enumerate(stream):
+        window.add(q)
+        if (i + 1) % cfg.gen_every == 0 and len(window) >= cfg.window_size // 2:
+            qs = window.sample()
+            cand = generator(next_id, data, qs, cfg.target_partitions)
+            next_id += 1
+            w_lo, w_hi = wl.stack_queries(qs)
+            cur_cost = layouts.eval_cost(current.meta, w_lo, w_hi).mean()
+            cand_cost = layouts.eval_cost(cand.meta, w_lo, w_hi).mean()
+            if cand_cost < cur_cost:
+                current = cand
+                current.materialize(data)
+                reorg_indices.append(i)
+        query_costs.append(
+            float(layouts.eval_cost(current.serving_meta(), q.lo, q.hi)))
+        state_seq.append(current.layout_id)
+    return oreo.RunResult(name=name, alpha=alpha,
+                          query_costs=np.asarray(query_costs),
+                          reorg_indices=reorg_indices,
+                          state_seq=np.asarray(state_seq))
+
+
+def run_regret(data: np.ndarray, stream: wl.WorkloadStream,
+               generator: lm.GeneratorFn, initial_layout: layouts.Layout,
+               alpha: float, mgr_cfg: Optional[lm.LayoutManagerConfig] = None,
+               max_candidates: int = 8,
+               name: str = "Regret") -> oreo.RunResult:
+    """Switch when cumulative saving vs. the current layout exceeds alpha."""
+    cfg = mgr_cfg or lm.LayoutManagerConfig()
+    model = cm.CostModel(alpha=alpha)
+    window: sampling.SlidingWindow[wl.Query] = sampling.SlidingWindow(
+        cfg.window_size)
+    current = initial_layout
+    current.materialize(data)
+    next_id = initial_layout.layout_id + 1
+    candidates: Dict[int, layouts.Layout] = {}
+    cum_saving: Dict[int, float] = {}
+    query_costs, reorg_indices, state_seq = [], [], []
+    for i, q in enumerate(stream):
+        window.add(q)
+        if (i + 1) % cfg.gen_every == 0 and len(window) >= cfg.window_size // 2:
+            cand = generator(next_id, data, window.sample(),
+                             cfg.target_partitions)
+            candidates[next_id] = cand
+            cum_saving[next_id] = 0.0
+            next_id += 1
+            if len(candidates) > max_candidates:   # bound tracked candidates
+                oldest = min(candidates)
+                del candidates[oldest]
+                del cum_saving[oldest]
+        cur_c = model.query_cost(current, q)        # estimate, for decisions
+        for sid, lay in candidates.items():
+            cum_saving[sid] += cur_c - model.query_cost(lay, q)
+        if cum_saving:
+            best = max(cum_saving, key=cum_saving.get)
+            if cum_saving[best] > alpha:
+                current = candidates.pop(best)
+                current.materialize(data)
+                cum_saving = {sid: 0.0 for sid in candidates}
+                reorg_indices.append(i)
+        query_costs.append(
+            float(layouts.eval_cost(current.serving_meta(), q.lo, q.hi)))
+        state_seq.append(current.layout_id)
+    return oreo.RunResult(name=name, alpha=alpha,
+                          query_costs=np.asarray(query_costs),
+                          reorg_indices=reorg_indices,
+                          state_seq=np.asarray(state_seq))
+
+
+# ---------------------------------------------------------------------------
+# Template-aware oracles (§VI-C)
+# ---------------------------------------------------------------------------
+
+def per_template_layouts(data: np.ndarray, stream: wl.WorkloadStream,
+                         generator: lm.GeneratorFn, target_partitions: int,
+                         queries_per_template: int = 200
+                         ) -> Dict[int, layouts.Layout]:
+    """Best layout per query template, built from that template's queries."""
+    by_template: Dict[int, List[wl.Query]] = {}
+    for q in stream.queries:
+        by_template.setdefault(q.template_id, []).append(q)
+    out: Dict[int, layouts.Layout] = {}
+    for tid, qs in sorted(by_template.items()):
+        out[tid] = generator(tid, data, qs[:queries_per_template],
+                             target_partitions)
+        out[tid].materialize(data)
+    return out
+
+
+def run_mts_optimal(data: np.ndarray, stream: wl.WorkloadStream,
+                    generator: lm.GeneratorFn, alpha: float,
+                    target_partitions: int = 32, gamma: float = 1.0,
+                    seed: int = 0,
+                    name: str = "MTS Optimal") -> oreo.RunResult:
+    """Fixed precomputed state space + our MTS switching (no dynamic states)."""
+    per_template = per_template_layouts(data, stream, generator,
+                                        target_partitions)
+    store = {lay.layout_id: lay for lay in per_template.values()}
+    model = cm.CostModel(alpha=alpha)
+    dumts = mts.DynamicUMTS(
+        alpha=alpha, initial_states=sorted(store), seed=seed,
+        transition_fn=predictors.gamma_biased_transition(gamma))
+    query_costs, reorg_indices, state_seq = [], [], []
+    for i, q in enumerate(stream):
+        costs = {sid: model.query_cost(lay, q) for sid, lay in store.items()}
+        prev = dumts.num_moves
+        state = dumts.observe(costs)
+        if dumts.num_moves > prev:
+            reorg_indices.append(i)
+        query_costs.append(
+            float(layouts.eval_cost(store[state].serving_meta(), q.lo, q.hi)))
+        state_seq.append(state)
+    return oreo.RunResult(name=name, alpha=alpha,
+                          query_costs=np.asarray(query_costs),
+                          reorg_indices=reorg_indices,
+                          state_seq=np.asarray(state_seq))
+
+
+def run_offline_optimal(data: np.ndarray, stream: wl.WorkloadStream,
+                        generator: lm.GeneratorFn, alpha: float,
+                        target_partitions: int = 32,
+                        name: str = "Offline Optimal") -> oreo.RunResult:
+    """Knows the whole stream: per-template layout, switch at boundaries."""
+    per_template = per_template_layouts(data, stream, generator,
+                                        target_partitions)
+    model = cm.CostModel(alpha=alpha)
+    query_costs = np.zeros(len(stream))
+    reorg_indices: List[int] = []
+    state_seq = np.zeros(len(stream), dtype=np.int64)
+    prev_tid = None
+    for start, end, tid in stream.segments:
+        lay = per_template[tid]
+        qs = stream.queries[start:end]
+        if qs:
+            q_lo, q_hi = wl.stack_queries(qs)
+            query_costs[start:end] = layouts.eval_cost(lay.serving_meta(),
+                                                       q_lo, q_hi)
+        state_seq[start:end] = lay.layout_id
+        if prev_tid is not None and tid != prev_tid:
+            reorg_indices.append(start)
+        prev_tid = tid
+    return oreo.RunResult(name=name, alpha=alpha, query_costs=query_costs,
+                          reorg_indices=reorg_indices, state_seq=state_seq)

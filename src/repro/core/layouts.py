@@ -1,0 +1,162 @@
+"""Data layouts and partition-level metadata.
+
+A *layout* is a mapping from rows of a table to partitions (the paper's BID
+column).  OREO never needs the mapping itself at decision time -- only the
+per-partition metadata (min/max per column, row counts), which is what
+``eval_skipped`` consumes.  This mirrors the paper's design: cost estimation is
+metadata-only and never touches row data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMetadata:
+    """Per-partition zone maps: ``mins``/``maxs`` are (P, C); ``rows`` is (P,)."""
+
+    mins: np.ndarray
+    maxs: np.ndarray
+    rows: np.ndarray
+
+    def __post_init__(self):
+        assert self.mins.shape == self.maxs.shape
+        assert self.mins.shape[0] == self.rows.shape[0]
+
+    @property
+    def num_partitions(self) -> int:
+        return int(self.mins.shape[0])
+
+    @property
+    def num_columns(self) -> int:
+        return int(self.mins.shape[1])
+
+    @property
+    def total_rows(self) -> int:
+        return int(self.rows.sum())
+
+
+def metadata_from_assignment(data: np.ndarray, assignment: np.ndarray,
+                             num_partitions: int,
+                             row_scale: float = 1.0) -> PartitionMetadata:
+    """Compute zone maps for ``data`` (N, C) under partition ``assignment`` (N,).
+
+    ``row_scale`` scales row counts when ``data`` is a sample standing in for
+    a larger table (the paper builds layouts and estimates metadata from
+    0.1-1% samples; the full table is only touched on reorganization).
+    """
+    n, c = data.shape
+    mins = np.full((num_partitions, c), np.inf)
+    maxs = np.full((num_partitions, c), -np.inf)
+    rows = np.zeros(num_partitions, dtype=np.float64)
+    order = np.argsort(assignment, kind="stable")
+    sorted_assign = assignment[order]
+    bounds = np.searchsorted(sorted_assign, np.arange(num_partitions + 1))
+    for p in range(num_partitions):
+        lo, hi = bounds[p], bounds[p + 1]
+        if hi > lo:
+            chunk = data[order[lo:hi]]
+            mins[p] = chunk.min(axis=0)
+            maxs[p] = chunk.max(axis=0)
+            rows[p] = (hi - lo) * row_scale
+    return PartitionMetadata(mins=mins, maxs=maxs, rows=rows)
+
+
+@dataclasses.dataclass
+class Layout:
+    """A data layout: an assignment function plus its partition metadata.
+
+    ``route`` maps a (N, C) array of rows to partition ids; it is retained so
+    a *reorganization* (full rewrite of the table under this layout) can be
+    materialized.  ``meta`` is the *estimated* metadata (built from the data
+    sample the generator saw) used for decision making; ``true_meta`` is the
+    exact metadata of the materialized table, filled in lazily the first time
+    the layout is actually reorganized to (:meth:`materialize`).
+    """
+
+    layout_id: int
+    name: str
+    technique: str                      # "qdtree" | "zorder" | "default" | ...
+    meta: PartitionMetadata
+    route: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    info: dict = dataclasses.field(default_factory=dict)
+    true_meta: Optional[PartitionMetadata] = None
+
+    @property
+    def num_partitions(self) -> int:
+        return self.meta.num_partitions
+
+    def materialize(self, data: np.ndarray) -> PartitionMetadata:
+        """Reorganize the full table under this layout; exact zone maps."""
+        if self.true_meta is None:
+            if self.route is None:
+                self.true_meta = self.meta
+            else:
+                assignment = self.route(data)
+                self.true_meta = metadata_from_assignment(
+                    data, assignment, self.num_partitions)
+        return self.true_meta
+
+    def serving_meta(self) -> PartitionMetadata:
+        """Metadata of the physically materialized table (falls back to the
+        estimate if never materialized -- e.g. the initial default layout)."""
+        return self.true_meta if self.true_meta is not None else self.meta
+
+
+# ---------------------------------------------------------------------------
+# Query cost evaluation ("eval_skipped")
+# ---------------------------------------------------------------------------
+
+def partitions_scanned(meta: PartitionMetadata, q_lo: np.ndarray,
+                       q_hi: np.ndarray) -> np.ndarray:
+    """Which partitions a conjunctive range query must scan.
+
+    ``q_lo``/``q_hi`` are (C,) or (Q, C).  A partition is scanned iff every
+    column's [min, max] range overlaps the query's [lo, hi] range.
+    Returns bool (P,) or (Q, P).
+    """
+    lo = np.atleast_2d(q_lo)[:, None, :]       # (Q, 1, C)
+    hi = np.atleast_2d(q_hi)[:, None, :]
+    overlap = (meta.mins[None] <= hi) & (meta.maxs[None] >= lo)  # (Q, P, C)
+    scanned = overlap.all(axis=-1)
+    if q_lo.ndim == 1:
+        return scanned[0]
+    return scanned
+
+
+def eval_cost(meta: PartitionMetadata, q_lo: np.ndarray,
+              q_hi: np.ndarray) -> np.ndarray:
+    """Fraction of data records accessed: the paper's service cost c(s, q).
+
+    Returns float (Q,) (or scalar for a single query), each in [0, 1].
+    """
+    scanned = partitions_scanned(meta, q_lo, q_hi)
+    total = max(meta.total_rows, 1)
+    cost = (scanned @ self_rows(meta)) / total
+    return cost
+
+
+def self_rows(meta: PartitionMetadata) -> np.ndarray:
+    return meta.rows.astype(np.float64)
+
+
+def eval_skipped(meta: PartitionMetadata, q_lo: np.ndarray,
+                 q_hi: np.ndarray) -> np.ndarray:
+    """Fraction of data records *skipped* (1 - cost)."""
+    return 1.0 - eval_cost(meta, q_lo, q_hi)
+
+
+def cost_vector(meta: PartitionMetadata, q_lo: np.ndarray,
+                q_hi: np.ndarray) -> np.ndarray:
+    """Cost vector of a layout over a query sample -- used for ε-admission."""
+    return np.atleast_1d(eval_cost(meta, q_lo, q_hi))
+
+
+def layout_distance(cv_a: np.ndarray, cv_b: np.ndarray) -> float:
+    """Normalized L1 distance between two cost vectors (paper §V-B)."""
+    if len(cv_a) == 0:
+        return 0.0
+    return float(np.abs(cv_a - cv_b).mean())

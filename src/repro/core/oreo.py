@@ -1,0 +1,149 @@
+"""OREO orchestrator: REORGANIZER (D-UMTS) x LAYOUT MANAGER over a stream.
+
+Implements the full online loop of Figure 1, including the paper's
+Δ-delay semantics for background reorganization (§VI-D5): the reorganization
+cost is charged as soon as the decision is made, but queries keep running on
+the *old* layout for Δ more queries before the swap takes effect.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import cost_model as cm
+from . import layout_manager as lm
+from . import layouts, mts, predictors, workload as wl
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Per-query trace of an online (or offline) reorganization run."""
+
+    name: str
+    alpha: float
+    query_costs: np.ndarray                 # (T,) fraction of data accessed
+    reorg_indices: List[int]                # query idx at which reorgs charged
+    state_seq: np.ndarray                   # (T,) decision state per query
+    info: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_query_cost(self) -> float:
+        return float(self.query_costs.sum())
+
+    @property
+    def total_reorg_cost(self) -> float:
+        return float(len(self.reorg_indices) * self.alpha)
+
+    @property
+    def total_cost(self) -> float:
+        return self.total_query_cost + self.total_reorg_cost
+
+    @property
+    def num_reorgs(self) -> int:
+        return len(self.reorg_indices)
+
+    def cumulative(self) -> np.ndarray:
+        cum = np.cumsum(self.query_costs)
+        for i in self.reorg_indices:
+            cum[i:] += self.alpha
+        return cum
+
+    def summary(self) -> str:
+        return (f"{self.name}: total={self.total_cost:.1f} "
+                f"(query={self.total_query_cost:.1f}, "
+                f"reorg={self.total_reorg_cost:.1f}, "
+                f"moves={self.num_reorgs})")
+
+
+@dataclasses.dataclass
+class OreoConfig:
+    alpha: float = 80.0
+    gamma: float = 1.0               # transition-bias exponent (0 = uniform)
+    delta: int = 0                   # background-reorg delay in queries
+    seed: int = 0
+    stay_on_phase_start: bool = True
+    manager: lm.LayoutManagerConfig = dataclasses.field(
+        default_factory=lm.LayoutManagerConfig)
+
+
+class OreoRunner:
+    """End-to-end online run of OREO on a (data, stream) pair."""
+
+    def __init__(self, data: np.ndarray, initial_layout: layouts.Layout,
+                 generator: lm.GeneratorFn,
+                 config: Optional[OreoConfig] = None):
+        self.config = config or OreoConfig()
+        self.data = data
+        self.manager = lm.LayoutManager(data, generator, initial_layout,
+                                        self.config.manager,
+                                        seed=self.config.seed)
+        self.dumts = mts.DynamicUMTS(
+            alpha=self.config.alpha,
+            initial_states=[initial_layout.layout_id],
+            seed=self.config.seed,
+            transition_fn=predictors.gamma_biased_transition(self.config.gamma),
+            stay_on_phase_start=self.config.stay_on_phase_start,
+        )
+        self.cost_model = cm.CostModel(alpha=self.config.alpha)
+
+    def run(self, stream: wl.WorkloadStream, name: str = "OREO") -> RunResult:
+        delta = self.config.delta
+        query_costs: List[float] = []
+        reorg_indices: List[int] = []
+        state_seq: List[int] = []
+        # The physically materialized layout serving queries.  Decisions use
+        # sample-estimated metadata; *charged* query costs use the exact
+        # metadata of the materialized table.
+        physical = self.manager.store[self.dumts.current_state]
+        physical.materialize(self.data)
+        pending_swaps: List[tuple[int, int]] = []       # (effective_idx, state)
+
+        for i, q in enumerate(stream):
+            added, removed = self.manager.on_query(q, self.dumts.current_state)
+            for sid in added:
+                self.dumts.add_state(sid)
+            for sid in removed:
+                self.dumts.remove_state(sid)
+
+            # Service-cost estimates for all states known to the decision
+            # maker -- metadata-only (never touches rows).
+            costs: Dict[int, float] = {}
+            for sid in set(self.dumts.states) | set(self.dumts.pending_additions):
+                if sid in self.manager.store:
+                    costs[sid] = self.cost_model.query_cost(
+                        self.manager.store[sid], q)
+                else:
+                    costs[sid] = 1.0
+            prev_moves = self.dumts.num_moves
+            decision_state = self.dumts.observe(costs)
+            if self.dumts.num_moves > prev_moves:
+                # Reorg cost charged at decision time (paper §VI-D5).
+                reorg_indices.append(i)
+                pending_swaps.append((i + delta, decision_state))
+
+            # Apply any swap whose background reorganization has finished.
+            while pending_swaps and pending_swaps[0][0] <= i:
+                _, sid = pending_swaps.pop(0)
+                if sid in self.manager.store:
+                    physical = self.manager.store[sid]
+                    physical.materialize(self.data)
+            qc = float(layouts.eval_cost(physical.serving_meta(), q.lo, q.hi))
+            query_costs.append(qc)
+            state_seq.append(decision_state)
+
+        return RunResult(
+            name=name,
+            alpha=self.config.alpha,
+            query_costs=np.asarray(query_costs),
+            reorg_indices=reorg_indices,
+            state_seq=np.asarray(state_seq),
+            info={
+                "phases": self.dumts.phase,
+                "max_state_space": self.dumts.max_state_space,
+                "competitive_bound": self.dumts.competitive_bound(),
+                "candidates_generated": self.manager.num_generated,
+                "candidates_admitted": self.manager.num_admitted,
+            },
+        )

@@ -1,0 +1,44 @@
+"""Transition-distribution predictors (paper §IV-C, Theorem IV.2).
+
+The default predictor weights each active state by the fraction of data it
+skipped in the *previous phase* and biases the jump distribution as
+P(s) ∝ w_s^gamma.  gamma=0 recovers the uniform BLS transition; gamma>0
+favors recently-good states, which empirically cuts reorganization cost by
+~17-28% (Table II) without hurting query cost.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from . import mts
+
+
+def gamma_biased_transition(gamma: float) -> mts.TransitionFn:
+    """Builds P(s) ∝ w_s^gamma over the active states.
+
+    The DynamicUMTS passes ``weights[s] = 1 - last_phase_cost(s)/alpha``
+    (average fraction skipped proxy); states unseen last phase get weight 1
+    (optimistic -- new states are worth exploring, matching the paper's
+    median/replay initialization spirit).
+    """
+
+    def fn(weights: Dict[int, float]) -> Dict[int, float]:
+        if gamma == 0.0 or not weights:
+            return mts.uniform_transition(weights)
+        powered = {s: max(w, 1e-6) ** gamma for s, w in weights.items()}
+        total = sum(powered.values())
+        return {s: v / total for s, v in powered.items()}
+
+    return fn
+
+
+def median_initialized_counter(existing_phase_costs: Dict[int, float]) -> float:
+    """Paper §IV-C: a state added mid-phase can have its counter initialized
+    to the median of query costs incurred so far by existing states."""
+    if not existing_phase_costs:
+        return 0.0
+    vals = sorted(existing_phase_costs.values())
+    mid = len(vals) // 2
+    if len(vals) % 2:
+        return vals[mid]
+    return 0.5 * (vals[mid - 1] + vals[mid])

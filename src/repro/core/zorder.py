@@ -1,0 +1,94 @@
+"""Workload-aware Z-order layout generation (paper §VI-A1).
+
+Picks the top-m most-queried columns in the recent window, quantizes each to
+16-bit codes, interleaves bits (Morton order), sorts and splits into k
+equal-size partitions.  The bit-interleave hot loop has a Pallas TPU kernel in
+``repro.kernels.zorder``; this module is the numpy producer used by the online
+simulator (and the kernel's semantics match ``interleave_bits`` here).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from . import layouts, workload as wl
+
+ZBITS = 16  # bits per column in the Morton code
+
+
+def quantize_columns(values: np.ndarray, col_lo: np.ndarray,
+                     col_hi: np.ndarray) -> np.ndarray:
+    """Linear-quantize selected columns to ZBITS-bit integer codes."""
+    span = np.maximum(col_hi - col_lo, 1e-12)
+    q = (values - col_lo) / span
+    q = np.clip(q, 0.0, 1.0)
+    return (q * ((1 << ZBITS) - 1)).astype(np.uint64)
+
+
+def interleave_bits(codes: np.ndarray) -> np.ndarray:
+    """Morton-interleave (N, m) ZBITS-bit codes into (N,) uint64 keys.
+
+    Bit b of column j lands at position b*m + j, so high bits of all columns
+    dominate jointly (standard Z-order).
+    """
+    n, m = codes.shape
+    keys = np.zeros(n, dtype=np.uint64)
+    for b in range(ZBITS):
+        for j in range(m):
+            bit = (codes[:, j] >> np.uint64(b)) & np.uint64(1)
+            keys |= bit << np.uint64(b * m + j)
+    return keys
+
+
+def build_zorder_layout(layout_id: int,
+                        data: np.ndarray,
+                        queries: Sequence[wl.Query],
+                        k: int,
+                        num_zcols: int = 3,
+                        sample_frac: float = 0.02,
+                        min_sample_rows: int = 4096,
+                        seed: int = 0,
+                        name: Optional[str] = None) -> layouts.Layout:
+    """Generate a Z-order layout on the top-``num_zcols`` queried columns.
+
+    Built from a data sample: key-quantile partition boundaries and estimated
+    metadata come from the sample; exact metadata is computed only on
+    materialization (actual reorganization).
+    """
+    rng = np.random.default_rng(seed)
+    n, c = data.shape
+    hist = wl.queried_column_histogram(queries, c)
+    if hist.sum() == 0:
+        zcols = np.arange(min(num_zcols, c))
+    else:
+        zcols = np.argsort(-hist, kind="stable")[:num_zcols]
+    zcols = np.sort(zcols)
+
+    m = min(max(int(n * sample_frac), min(n, min_sample_rows)), n)
+    sample = data[rng.choice(n, size=m, replace=False)]
+    sub = sample[:, zcols]
+    col_lo = sub.min(axis=0)
+    col_hi = sub.max(axis=0)
+    keys = interleave_bits(quantize_columns(sub, col_lo, col_hi))
+    order = np.argsort(keys, kind="stable")
+
+    # Key-quantile boundaries let `route` assign any row consistently.
+    boundaries = keys[order][np.minimum((np.arange(1, k) * m) // k, m - 1)]
+
+    def route(rows: np.ndarray) -> np.ndarray:
+        keys_r = interleave_bits(
+            quantize_columns(rows[:, zcols], col_lo, col_hi))
+        return np.minimum(np.searchsorted(boundaries, keys_r, side="right"),
+                          k - 1)
+
+    meta = layouts.metadata_from_assignment(sample, route(sample), k,
+                                            row_scale=n / m)
+    return layouts.Layout(
+        layout_id=layout_id,
+        name=name or f"zorder[{','.join(map(str, zcols.tolist()))}]#{layout_id}",
+        technique="zorder",
+        meta=meta,
+        route=route,
+        info={"zcols": zcols.tolist(), "sample_rows": m},
+    )

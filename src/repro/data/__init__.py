@@ -1,0 +1,11 @@
+"""Data substrate: synthetic datasets, partition store, OREO-managed pipeline."""
+from repro.data import datasets, partition_store, pipeline
+from repro.data.datasets import (DATASETS, make_telemetry_like,
+                                 make_tpcds_like, make_tpch_like)
+from repro.data.partition_store import PartitionStore
+from repro.data.pipeline import OreoDataPipeline, mixture_recipe, synth_corpus
+
+__all__ = ["DATASETS", "OreoDataPipeline", "PartitionStore",
+           "make_telemetry_like", "make_tpcds_like", "make_tpch_like",
+           "mixture_recipe", "synth_corpus", "datasets", "partition_store",
+           "pipeline"]

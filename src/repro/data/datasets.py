@@ -1,0 +1,123 @@
+"""Synthetic dataset generators mirroring the paper's three workloads.
+
+* TPC-H-like: denormalized lineitem-style fact table -- mixed uniform /
+  exponential / correlated-date / low-cardinality-categorical columns.
+* TPC-DS-like: store_sales-style fact table with dimension-coded columns and
+  skewed (Zipf) categorical distributions.
+* Telemetry-like: ingestion-log table dominated by an arrival-time column
+  (queries are time ranges + collector filters), matching the SuperCollider
+  description in §VI-A2.
+
+All generators return (data (N, C) float64, column_names).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def make_tpch_like(n_rows: int = 200_000, seed: int = 0
+                   ) -> Tuple[np.ndarray, List[str]]:
+    rng = np.random.default_rng(seed)
+    n = n_rows
+    ship_date = rng.uniform(0, 2500, n)                      # days
+    commit_date = ship_date + rng.normal(30, 15, n)          # correlated
+    receipt_date = ship_date + np.abs(rng.normal(14, 7, n))
+    quantity = rng.integers(1, 51, n).astype(float)
+    extended_price = quantity * rng.uniform(900, 105000 / 50, n)
+    discount = rng.choice(np.arange(0, 0.11, 0.01), n)
+    tax = rng.choice(np.arange(0, 0.09, 0.01), n)
+    order_key = np.sort(rng.uniform(0, 6e6, n))              # clustered
+    part_key = rng.uniform(0, 2e5, n)
+    supp_key = rng.uniform(0, 1e4, n)
+    line_status = rng.integers(0, 2, n).astype(float)
+    return_flag = rng.integers(0, 3, n).astype(float)
+    cols = np.stack([ship_date, commit_date, receipt_date, quantity,
+                     extended_price, discount, tax, order_key, part_key,
+                     supp_key, line_status, return_flag], axis=1)
+    names = ["ship_date", "commit_date", "receipt_date", "quantity",
+             "extended_price", "discount", "tax", "order_key", "part_key",
+             "supp_key", "line_status", "return_flag"]
+    return cols, names
+
+
+def make_tpcds_like(n_rows: int = 200_000, seed: int = 1
+                    ) -> Tuple[np.ndarray, List[str]]:
+    rng = np.random.default_rng(seed)
+    n = n_rows
+    sold_date = np.sort(rng.uniform(2450000, 2453000, n))    # julian days
+    sold_time = rng.uniform(0, 86400, n)
+    item = rng.zipf(1.5, n).clip(max=18000).astype(float)
+    customer = rng.uniform(0, 1e5, n)
+    store = rng.zipf(1.3, n).clip(max=400).astype(float)
+    promo = rng.zipf(2.0, n).clip(max=300).astype(float)
+    quantity = rng.integers(1, 100, n).astype(float)
+    wholesale = rng.uniform(1, 100, n)
+    list_price = wholesale * rng.uniform(1.0, 2.0, n)
+    sales_price = list_price * rng.uniform(0.2, 1.0, n)
+    ext_discount = (list_price - sales_price) * quantity
+    net_paid = sales_price * quantity
+    net_profit = net_paid - wholesale * quantity
+    cols = np.stack([sold_date, sold_time, item, customer, store, promo,
+                     quantity, wholesale, list_price, sales_price,
+                     ext_discount, net_paid, net_profit], axis=1)
+    names = ["sold_date", "sold_time", "item", "customer", "store", "promo",
+             "quantity", "wholesale", "list_price", "sales_price",
+             "ext_discount", "net_paid", "net_profit"]
+    return cols, names
+
+
+def make_telemetry_like(n_rows: int = 200_000, seed: int = 2
+                        ) -> Tuple[np.ndarray, List[str]]:
+    rng = np.random.default_rng(seed)
+    n = n_rows
+    arrival = np.sort(rng.uniform(0, 180 * 86400, n))        # 6 months
+    collector = rng.zipf(1.4, n).clip(max=120).astype(float)
+    job_id = rng.uniform(0, 5e4, n)
+    duration = np.abs(rng.normal(300, 200, n))
+    rows_in = np.abs(rng.normal(1e6, 5e5, n))
+    bytes_in = rows_in * rng.uniform(50, 200, n)
+    status = rng.choice([0, 1, 2], n, p=[0.9, 0.07, 0.03]).astype(float)
+    team = rng.zipf(1.6, n).clip(max=100).astype(float)
+    retries = rng.poisson(0.2, n).astype(float)
+    cols = np.stack([arrival, collector, job_id, duration, rows_in,
+                     bytes_in, status, team, retries], axis=1)
+    names = ["arrival_time", "collector", "job_id", "duration", "rows_in",
+             "bytes_in", "status", "team", "retries"]
+    return cols, names
+
+
+DATASETS = {
+    "tpch": make_tpch_like,
+    "tpcds": make_tpcds_like,
+    "telemetry": make_telemetry_like,
+}
+
+
+def telemetry_templates(num_columns: int, seed: int = 0):
+    """Telemetry-flavored templates matching the paper's description of the
+    SuperCollider trace: time-range queries (hours..months), collector-name
+    filters, plus job-debugging families (team dashboards, failure triage,
+    long-job investigations, volume outliers) that conflict with pure
+    time-ordering."""
+    from repro.core import workload as wl
+    rng = np.random.default_rng(seed)
+    templates = []
+    tid = 0
+    for hours in (6, 48, 24 * 30):     # time-range families
+        sel = hours * 3600 / (180 * 86400)
+        templates.append(wl.QueryTemplate(tid, (0,), (min(sel, 1.0),)))
+        tid += 1
+    for _ in range(2):                 # collector + time families
+        templates.append(wl.QueryTemplate(
+            tid, (1, 0), (float(rng.uniform(0.01, 0.05)),
+                          float(rng.uniform(0.05, 0.2)))))
+        tid += 1
+    # cols: 2=job_id 3=duration 4=rows_in 5=bytes_in 6=status 7=team
+    templates.append(wl.QueryTemplate(tid, (7,), (0.03,))); tid += 1
+    templates.append(wl.QueryTemplate(tid, (6, 3), (0.05, 0.1))); tid += 1
+    templates.append(wl.QueryTemplate(tid, (3,), (0.05,))); tid += 1
+    templates.append(wl.QueryTemplate(tid, (4, 5), (0.08, 0.15))); tid += 1
+    templates.append(wl.QueryTemplate(tid, (2,), (0.04,))); tid += 1
+    return templates

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) causal attention.
+
+Canonical TPU structure: grid (batch*heads, n_q_blocks, n_kv_blocks) with the
+kv dim innermost; running (max, denom, accumulator) live in VMEM scratch and
+persist across kv grid steps; the output block is written on the last kv
+step.  Block shapes are the hillclimb surface: (block_q, block_k) tiles must
+be MXU-aligned (multiples of 128 on the lane dim) and sized so
+q + k + v + acc fit VMEM (~16MB/core on v5e).
+
+The jnp implementation in ``repro.models.layers.flash_attention`` mirrors
+this blocking exactly; ``ops.py`` dispatches kernel-on-TPU / jnp-elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, prefix_len, bq, bk, nk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    # Causal block skip: only compute blocks intersecting the mask.
+    run = jnp.logical_or(not causal, ik * bk <= iq * bq + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)              # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = k_pos <= q_pos
+            if prefix_len > 0:
+                mask = jnp.logical_or(mask, k_pos < prefix_len)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)              # (bk, dh)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "prefix_len", "bq",
+                                             "bk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, prefix_len: int = 0,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = True) -> jax.Array:
+    """q: (BH, T, dh); k, v: (BH, S, dh) -> (BH, T, dh)."""
+    BH, T, dh = q.shape
+    S = k.shape[1]
+    bq = min(bq, T)
+    bk = min(bk, S)
+    pad_q = (-T) % bq
+    pad_k = (-S) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Tp, Sp = T + pad_q, S + pad_k
+    nq, nk = Tp // bq, Sp // bk
+    if pad_k and not causal:
+        raise ValueError("non-causal padding needs explicit kv masking")
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=dh ** -0.5, causal=causal,
+                          prefix_len=prefix_len, bq=bq, bk=bk, nk=nk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, dh), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :T]

@@ -1,0 +1,39 @@
+"""Jit'd wrapper: GQA-aware attention dispatching to the Pallas kernel.
+
+On TPU the kernel path is compiled; on CPU the kernel runs in interpret mode
+(tests) while production CPU paths use the blocked jnp implementation in
+``repro.models.layers`` (identical math and blocking).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as fa
+from repro.kernels.flash_attention import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, prefix_len: int = 0,
+              use_kernel: bool = True, **block_kw) -> jax.Array:
+    """q: (B, T, Hq, dh); k, v: (B, S, Hkv, dh) -> (B, T, Hq, dh)."""
+    B, T, Hq, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if g > 1:                         # expand kv heads for the MHA kernel
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, T, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, S, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, S, dh)
+    if not use_kernel:
+        out = ref.attention(qf, kf, vf, causal=causal, prefix_len=prefix_len)
+    else:
+        out = fa.flash_attention_pallas(qf, kf, vf, causal=causal,
+                                        prefix_len=prefix_len,
+                                        interpret=not _on_tpu(), **block_kw)
+    return out.reshape(B, Hq, T, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel (exact softmax attention)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True,
+              prefix_len: int = 0) -> jax.Array:
+    """q: (BH, T, dh); k, v: (BH, S, dh) -> (BH, T, dh); exact softmax."""
+    T, S = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(T)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos <= qpos
+        if prefix_len > 0:
+            mask = mask | (kpos < prefix_len)
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Jit'd public wrapper for the pruning kernel.
+
+Dispatches to the Pallas kernel on TPU (compiled) and to interpret mode /
+the jnp oracle elsewhere.  ``scan_fractions`` composes the kernel with the
+row-count weighting used by the cost model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pruning import pruning, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def scan_matrix(q_lo, q_hi, p_min, p_max, use_kernel: bool = True,
+                **block_kw) -> jax.Array:
+    if not use_kernel:
+        return ref.scan_matrix(q_lo, q_hi, p_min, p_max)
+    return pruning.scan_matrix_pallas(q_lo, q_hi, p_min, p_max,
+                                      interpret=not _on_tpu(), **block_kw)
+
+
+@jax.jit
+def scan_fractions(q_lo, q_hi, p_min, p_max, rows) -> jax.Array:
+    m = ref.scan_matrix(q_lo, q_hi, p_min, p_max)  # jnp path under jit
+    total = jnp.maximum(rows.sum(), 1.0)
+    return (m @ rows.astype(jnp.float32)) / total
+
+
+def cost_vectors(q_lo, q_hi, layouts_meta, use_kernel: bool = True):
+    """Batch cost vectors for several layouts (list of (min, max, rows))."""
+    out = []
+    for p_min, p_max, rows in layouts_meta:
+        m = scan_matrix(q_lo, q_hi, jnp.asarray(p_min), jnp.asarray(p_max),
+                        use_kernel=use_kernel)
+        total = jnp.maximum(jnp.asarray(rows).sum(), 1.0)
+        out.append((m @ jnp.asarray(rows, jnp.float32)) / total)
+    return jnp.stack(out)

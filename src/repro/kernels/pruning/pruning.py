@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: partition-pruning scan matrix (paper's eval_skipped).
+
+The LAYOUT MANAGER evaluates every candidate layout against the R-TBS query
+sample (cost vectors, Alg. 5) and the REORGANIZER scores every incoming query
+against every state's metadata -- both reduce to the (Q, P) interval-overlap
+matrix over C columns.  On TPU this is a VPU-bound elementwise-AND reduction:
+
+  grid = (Q/BQ, P/BP); each program holds a (BQ, C) query tile and a (BP, C)
+  partition tile in VMEM and accumulates the (BQ, BP) overlap AND over column
+  chunks, so the (Q, P, C) broadcast tensor never materializes.
+
+Arithmetic intensity ~ C flops/byte over metadata -- memory-bound; block
+sizes keep the working set (2*BQ*C + 2*BP*C + BQ*BP floats) well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BP = 128
+
+
+def _kernel(qlo_ref, qhi_ref, pmin_ref, pmax_ref, out_ref, *, col_chunk):
+    qlo = qlo_ref[...]            # (BQ, C)
+    qhi = qhi_ref[...]
+    pmin = pmin_ref[...]          # (BP, C)
+    pmax = pmax_ref[...]
+    bq, c = qlo.shape
+    bp = pmin.shape[0]
+    acc = jnp.ones((bq, bp), jnp.float32)
+    n_chunks = pl.cdiv(c, col_chunk)
+    for i in range(n_chunks):
+        lo = i * col_chunk
+        width = min(col_chunk, c - lo)
+        ql = jax.lax.dynamic_slice(qlo, (0, lo), (bq, width))
+        qh = jax.lax.dynamic_slice(qhi, (0, lo), (bq, width))
+        pn = jax.lax.dynamic_slice(pmin, (0, lo), (bp, width))
+        px = jax.lax.dynamic_slice(pmax, (0, lo), (bp, width))
+        ov = ((pn[None, :, :] <= qh[:, None, :])
+              & (px[None, :, :] >= ql[:, None, :]))
+        acc = acc * ov.all(axis=-1).astype(jnp.float32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bp", "col_chunk",
+                                             "interpret"))
+def scan_matrix_pallas(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                       p_max: jax.Array, bq: int = DEFAULT_BQ,
+                       bp: int = DEFAULT_BP, col_chunk: int = 8,
+                       interpret: bool = True) -> jax.Array:
+    """(Q, C) x (P, C) -> (Q, P) float32 scan matrix."""
+    Q, C = q_lo.shape
+    P = p_min.shape[0]
+    bq = min(bq, Q)
+    bp = min(bp, P)
+    pad_q = (-Q) % bq
+    pad_p = (-P) % bp
+    if pad_q:
+        q_lo = jnp.pad(q_lo, ((0, pad_q), (0, 0)), constant_values=1.0)
+        q_hi = jnp.pad(q_hi, ((0, pad_q), (0, 0)), constant_values=0.0)
+    if pad_p:
+        p_min = jnp.pad(p_min, ((0, pad_p), (0, 0)), constant_values=1.0)
+        p_max = jnp.pad(p_max, ((0, pad_p), (0, 0)), constant_values=0.0)
+    Qp, Pp = Q + pad_q, P + pad_p
+    grid = (Qp // bq, Pp // bp)
+    out = pl.pallas_call(
+        functools.partial(_kernel, col_chunk=col_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, C), lambda i, j: (j, 0)),
+            pl.BlockSpec((bp, C), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Pp), jnp.float32),
+        interpret=interpret,
+    )(q_lo, q_hi, p_min, p_max)
+    return out[:Q, :P]

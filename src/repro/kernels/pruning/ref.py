@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the partition-pruning (eval_skipped) kernel.
+
+Semantics match ``repro.core.layouts.partitions_scanned`` / ``eval_cost``:
+a partition must be scanned iff every column's [min, max] zone overlaps the
+query's [lo, hi] range.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_matrix(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                p_max: jax.Array) -> jax.Array:
+    """(Q, C), (Q, C), (P, C), (P, C) -> (Q, P) float32 in {0, 1}."""
+    overlap = ((p_min[None, :, :] <= q_hi[:, None, :])
+               & (p_max[None, :, :] >= q_lo[:, None, :]))       # (Q, P, C)
+    return overlap.all(axis=-1).astype(jnp.float32)
+
+
+def scan_fractions(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                   p_max: jax.Array, rows: jax.Array) -> jax.Array:
+    """Fraction of data records accessed per query: (Q,) float32."""
+    m = scan_matrix(q_lo, q_hi, p_min, p_max)
+    total = jnp.maximum(rows.sum(), 1.0)
+    return (m @ rows.astype(jnp.float32)) / total

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the Z-order kernel (TPU kernel / interpret fallback)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.zorder import ref, zorder
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def zorder_keys(values, lo, hi, bits: int = 10,
+                use_kernel: bool = True) -> jax.Array:
+    if not use_kernel:
+        return ref.zorder_keys(values, lo, hi, bits)
+    return zorder.zorder_keys_pallas(values, lo, hi, bits=bits,
+                                     interpret=not _on_tpu())

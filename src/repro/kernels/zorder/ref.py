@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for Z-order (Morton) bit interleaving."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interleave(codes: jax.Array, bits: int) -> jax.Array:
+    """(N, m) uint32 codes (each < 2**bits) -> (N,) uint32 Morton keys.
+
+    Bit b of column j lands at position b*m + j.  Requires m*bits <= 32.
+    """
+    n, m = codes.shape
+    assert m * bits <= 32 and bits <= 16, (m, bits)
+    keys = jnp.zeros(n, jnp.uint32)
+    codes = codes.astype(jnp.uint32)
+    for b in range(bits):
+        for j in range(m):
+            bit = (codes[:, j] >> jnp.uint32(b)) & jnp.uint32(1)
+            keys = keys | (bit << jnp.uint32(b * m + j))
+    return keys
+
+
+def quantize(values: jax.Array, lo: jax.Array, hi: jax.Array,
+             bits: int) -> jax.Array:
+    """Linear-quantize (N, m) float columns to ``bits``-bit codes."""
+    span = jnp.maximum(hi - lo, 1e-12)
+    q = jnp.clip((values - lo) / span, 0.0, 1.0)
+    return (q * ((1 << bits) - 1)).astype(jnp.uint32)
+
+
+def zorder_keys(values: jax.Array, lo: jax.Array, hi: jax.Array,
+                bits: int = 10) -> jax.Array:
+    return interleave(quantize(values, lo, hi, bits), bits)

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: Z-order (Morton) key computation.
+
+Z-order reorganization quantizes the top-queried columns and sorts rows by
+interleaved-bit keys; at reorganization time this runs over every row of the
+table, so the quantize+interleave inner loop is the bandwidth-bound hot spot
+(the sort itself is XLA's).  Integer VPU work, tiled (BN, m) blocks in VMEM;
+the bit loop is fully unrolled (bits * m iterations of shift/mask/or).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 1024
+
+
+def _kernel(vals_ref, lo_ref, hi_ref, out_ref, *, bits):
+    vals = vals_ref[...]                    # (BN, m) f32
+    lo = lo_ref[...]                        # (1, m)
+    hi = hi_ref[...]
+    n, m = vals.shape
+    span = jnp.maximum(hi - lo, 1e-12)
+    q = jnp.clip((vals - lo) / span, 0.0, 1.0)
+    codes = (q * ((1 << bits) - 1)).astype(jnp.uint32)
+    keys = jnp.zeros((n,), jnp.uint32)
+    for b in range(bits):
+        for j in range(m):
+            bit = (codes[:, j] >> jnp.uint32(b)) & jnp.uint32(1)
+            keys = keys | (bit << jnp.uint32(b * m + j))
+    out_ref[...] = keys
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bn", "interpret"))
+def zorder_keys_pallas(values: jax.Array, lo: jax.Array, hi: jax.Array,
+                       bits: int = 10, bn: int = DEFAULT_BN,
+                       interpret: bool = True) -> jax.Array:
+    """(N, m) float columns -> (N,) uint32 Morton keys (m*bits <= 32)."""
+    N, m = values.shape
+    assert m * bits <= 32 and bits <= 16, (m, bits)
+    bn = min(bn, N)
+    pad = (-N) % bn
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+    lo2 = lo.reshape(1, m).astype(jnp.float32)
+    hi2 = hi.reshape(1, m).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=((N + pad) // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N + pad,), jnp.uint32),
+        interpret=interpret,
+    )(values.astype(jnp.float32), lo2, hi2)
+    return out[:N]

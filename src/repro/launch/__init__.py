@@ -1,0 +1,1 @@
+"""Launch: production meshes, dry-run driver, roofline analysis, trainers."""

@@ -1,0 +1,72 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+"""Per-op flop / collective attribution for one dry-run cell (perf tooling).
+
+Usage: PYTHONPATH=src python -m repro.launch.breakdown --arch X --shape Y
+           [--collectives] [--microbatches N] ...
+"""
+
+import argparse    # noqa: E402
+import re          # noqa: E402
+
+from repro.launch import hlo_cost            # noqa: E402
+from repro.launch.dryrun import run_cell     # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-parallel", type=int, default=None)
+    ap.add_argument("--accum-dtype", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    sp = None if args.seq_parallel is None else bool(args.seq_parallel)
+    rec = run_cell(args.arch, args.shape, args.multi_pod,
+                   microbatches=args.microbatches, seq_parallel=sp,
+                   accum_dtype=args.accum_dtype,
+                   capacity_factor=args.capacity_factor,
+                   remat_policy=args.remat_policy, keep_hlo=True)
+    hlo = rec.pop("hlo_text")
+    hc = rec["hlo_cost"]
+    print(f"flops/dev={hc['flops_per_device']:.3e} "
+          f"bytes/dev={hc['bytes_per_device']:.3e} "
+          f"coll/dev={hc['collective_bytes_per_device']:.3e}")
+
+    comps = hlo_cost.parse_computations(hlo)
+    mult = hlo_cost._multipliers(comps)
+    dots, colls = [], []
+    for comp, ops in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0:
+            continue
+        symbols = hlo_cost._symbol_table(ops)
+        for op in ops:
+            meta = re.search(r'op_name="([^"]*)"', op.line)
+            name = (meta.group(1) if meta else "")[-72:]
+            if op.opcode == "dot":
+                dots.append((m * hlo_cost._dot_flops(op, symbols),
+                             op.type_str[:30], f"x{m:.0f}", name))
+            base = op.opcode.replace("-start", "")
+            if base in hlo_cost._COLLECTIVES:
+                colls.append((m * hlo_cost._shape_bytes(op.type_str), base,
+                              op.type_str[:40], f"x{m:.0f}", name))
+    print(f"\n== top dots (total {sum(d[0] for d in dots):.3e} flops/dev):")
+    for d in sorted(dots, reverse=True)[:args.top]:
+        print(f"  {d[0]:.2e} {d[1]:32s} {d[2]:5s} {d[3]}")
+    print(f"\n== top collectives (total "
+          f"{sum(c[0] for c in colls):.3e} bytes/dev):")
+    for c in sorted(colls, reverse=True)[:args.top]:
+        print(f"  {c[0]:.2e} {c[1]:18s} {c[2]:42s} {c[3]:5s} {c[4]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")   # silence SPMD warnings
+
+# NOTE: the two lines above MUST run before any other import (including jax
+# and repro.*): jax locks the device count at first backend initialization.
+# The 512 host devices exist ONLY for this dry-run process; smoke tests and
+# benchmarks see the real single CPU device.
+
+import argparse          # noqa: E402
+import collections       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.base import SHAPES, get_arch, runnable_cells, skipped_cells  # noqa: E402
+from repro.launch import cells as cell_opts                                     # noqa: E402
+from repro.launch import hlo_cost                                               # noqa: E402
+from repro.launch import mesh as mesh_lib                                       # noqa: E402
+from repro.models import build_model, input_specs, sharding                     # noqa: E402
+from repro.train.train_loop import (build_train_step, init_train_state,         # noqa: E402
+                                    train_state_specs)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+\S+\s+(" + "|".join(c + r"(?:-start)?" for c in _COLLECTIVES)
+    + r")\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the partitioned HLO."""
+    per_type = collections.defaultdict(int)
+    counts = collections.defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1).replace("-start", "")
+        operand_region = line[m.end():]
+        total = 0
+        for dtype, dims in _SHAPE_RE.findall(operand_region):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dtype]
+        per_type[op] += total
+        counts[op] += 1
+    return {"bytes_by_type": dict(per_type),
+            "counts_by_type": dict(counts),
+            "total_bytes": int(sum(per_type.values()))}
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        if hasattr(m, field):
+            out[field] = int(getattr(m, field))
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if c is None:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return {k: float(v) for k, v in c.items()
+            if isinstance(v, (int, float))}
+
+
+def _drop_batch(tree):
+    """B=1 cells (long_500k) cannot shard the batch dim: replicate it."""
+    from jax.sharding import PartitionSpec as P
+
+    def fix(spec):
+        return P(*[None if el == "batch" else el for el in spec])
+
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(
+        x, jax.sharding.PartitionSpec))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches=None, seq_parallel=None, opt_dtype=None,
+             accum_dtype=None, capacity_factor=None, remat_policy=None,
+             keep_hlo: bool = False) -> dict:
+    t_start = time.time()
+    shape = SHAPES[shape_name]
+    opts = cell_opts.cell_options(arch, shape_name, microbatches,
+                                  seq_parallel, opt_dtype)
+    if accum_dtype is not None:
+        import dataclasses as _dc
+        opts = _dc.replace(opts, train=_dc.replace(
+            opts.train, accum_dtype=accum_dtype))
+    if capacity_factor is not None:
+        from repro.models import layers as _L
+        _L.set_moe_capacity_factor(capacity_factor)
+    if remat_policy is not None:
+        from repro.models import layers as _L
+        _L.set_remat_policy(remat_policy)
+    cfg = get_arch(arch)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    baxes = mesh_lib.batch_axes(multi_pod)
+    sharding.set_mesh(mesh, batch_axes=baxes, model_axis="model",
+                      fsdp_axis="data", seq_parallel=opts.seq_parallel)
+    model = build_model(cfg)
+    batch_shapes, batch_lspecs = input_specs(cfg, shape)
+    if shape.global_batch == 1:
+        batch_lspecs = _drop_batch(batch_lspecs)
+    batch_ns = mesh_lib.named_tree(batch_lspecs, mesh, multi_pod)
+    param_ns = mesh_lib.named_tree(model.param_specs(), mesh, multi_pod)
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0), opts.opt,
+                                     opts.train))
+        state_ns = mesh_lib.named_tree(
+            train_state_specs(model, opts.train), mesh, multi_pod)
+        step = build_train_step(model, opts.opt, opts.train)
+        jfn = jax.jit(step, in_shardings=(state_ns, batch_ns),
+                      out_shardings=(state_ns, None), donate_argnums=0)
+        t0 = time.time()
+        lowered = jfn.lower(state_shapes, batch_shapes)
+    elif shape.kind == "prefill":
+        params_shapes = jax.eval_shape(
+            lambda: model.init_params(jax.random.PRNGKey(0)))
+        fn = lambda params, batch: model.prefill(params, batch,
+                                                 max_len=shape.seq_len)
+        jfn = jax.jit(fn, in_shardings=(param_ns, batch_ns))
+        t0 = time.time()
+        lowered = jfn.lower(params_shapes, batch_shapes)
+    else:   # decode
+        params_shapes = jax.eval_shape(
+            lambda: model.init_params(jax.random.PRNGKey(0)))
+        cache_shapes, cache_lspecs = model.cache_spec(
+            shape.global_batch, shape.seq_len,
+            seq_axes=opts.cache_seq_axes)
+        if shape.global_batch == 1:
+            cache_lspecs = _drop_batch(cache_lspecs)
+        cache_ns = mesh_lib.named_tree(cache_lspecs, mesh, multi_pod)
+        jfn = jax.jit(model.decode_step,
+                      in_shardings=(param_ns, batch_ns, cache_ns),
+                      donate_argnums=2)
+        t0 = time.time()
+        lowered = jfn.lower(params_shapes, batch_shapes, cache_shapes)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": mesh.devices.size,
+        "options": {
+            "microbatches": opts.train.microbatches,
+            "seq_parallel": opts.seq_parallel,
+            "opt_state_dtype": opts.opt.state_dtype,
+            "accum_dtype": opts.train.accum_dtype,
+            "capacity_factor": capacity_factor,
+            "remat_policy": remat_policy or "nothing",
+            "cache_seq_axes": list(opts.cache_seq_axes),
+        },
+        "num_params": cfg.num_params(),
+        "num_active_params": cfg.num_active_params(),
+        "lower_seconds": round(t_lower, 1),
+        "compile_seconds": round(t_compile, 1),
+        "total_seconds": round(time.time() - t_start, 1),
+        "memory_analysis": _mem_dict(compiled),
+        "cost_analysis": _cost_dict(compiled),
+        # Trip-count-weighted re-analysis of the partitioned module (XLA's
+        # own cost_analysis visits while bodies once -- see hlo_cost.py).
+        "hlo_cost": hlo_cost.analyze(hlo),
+        "collectives": parse_collective_bytes(hlo),
+        "hlo_bytes": len(hlo),
+    }
+    if keep_hlo:
+        record["hlo_text"] = hlo
+    del compiled, lowered, hlo
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-parallel", type=int, default=None,
+                    help="0/1 override")
+    ap.add_argument("--opt-dtype", default=None)
+    ap.add_argument("--accum-dtype", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["nothing", "dots"])
+    ap.add_argument("--tag", default="", help="suffix for output files")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = runnable_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tagname = f"{arch}__{shape_name}__{'multi' if mp else 'single'}"
+            if args.tag:
+                tagname += f"__{args.tag}"
+            out_path = os.path.join(args.out, tagname + ".json")
+            print(f"=== {tagname} ===", flush=True)
+            try:
+                sp = None if args.seq_parallel is None else bool(
+                    args.seq_parallel)
+                rec = run_cell(arch, shape_name, mp,
+                               microbatches=args.microbatches,
+                               seq_parallel=sp, opt_dtype=args.opt_dtype,
+                               accum_dtype=args.accum_dtype,
+                               capacity_factor=args.capacity_factor,
+                               remat_policy=args.remat_policy)
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                hc = rec["hlo_cost"]
+                print(f"    ok: compile={rec['compile_seconds']}s "
+                      f"flops/dev={hc['flops_per_device']:.3e} "
+                      f"bytes/dev={hc['bytes_per_device']:.3e} "
+                      f"coll/dev={hc['collective_bytes_per_device']:.3e}B",
+                      flush=True)
+                results.append(rec)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((tagname, f"{type(e).__name__}: {e}"))
+                with open(out_path + ".failed", "w") as f:
+                    f.write(traceback.format_exc())
+
+    print(f"\n==== dry-run done: {len(results)} ok, {len(failures)} failed")
+    for name, err in failures:
+        print(f"  FAIL {name}: {err[:300]}")
+    for arch, shape_name, why in skipped_cells():
+        print(f"  SKIP {arch} x {shape_name}: {why} (see DESIGN.md)")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

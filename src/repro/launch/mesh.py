@@ -1,0 +1,75 @@
+"""Production meshes + logical->physical sharding-spec resolution.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) -- the pod axis
+extends data parallelism (only gradient all-reduce crosses the pod links).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Logical spec resolution.  Model code emits PartitionSpecs over the logical
+# vocabulary {"model", "fsdp", "batch", "seq2", None}; this maps them onto
+# the physical mesh axes.
+#   model -> "model"                         (tensor/expert parallel)
+#   fsdp  -> "data"                          (ZeRO-3 param sharding, in-pod)
+#   batch -> ("pod","data") | "data"         (data parallel)
+#   seq2  -> ("data","model")                (long-context KV sequence shard)
+# ---------------------------------------------------------------------------
+
+def _resolve_element(el, multi_pod: bool):
+    if el is None:
+        return None
+    if isinstance(el, (tuple, list)):
+        out = []
+        for e in el:
+            r = _resolve_element(e, multi_pod)
+            if r is None:
+                continue
+            out.extend(r if isinstance(r, tuple) else (r,))
+        return tuple(out) if out else None
+    if el == "model":
+        return "model"
+    if el == "fsdp":
+        return "data"
+    if el == "batch":
+        return ("pod", "data") if multi_pod else "data"
+    if el == "seq2":
+        return ("data", "model")
+    raise ValueError(f"unknown logical axis {el!r}")
+
+
+def resolve_spec(spec: P, multi_pod: bool) -> P:
+    return P(*[_resolve_element(el, multi_pod) for el in spec])
+
+
+def resolve_tree(tree, multi_pod: bool):
+    return jax.tree.map(lambda s: resolve_spec(s, multi_pod), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named_tree(tree, mesh: Mesh, multi_pod: bool):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, multi_pod)), tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,8 @@
+"""Model zoo: dense / MoE / VLM / audio transformers, RWKV-6, Mamba-2,
+Zamba2 hybrid -- all pure-JAX with logical sharding specs."""
+from repro.models import factory, hybrid, layers, losses, mamba2, rwkv6
+from repro.models import sharding, transformer
+from repro.models.factory import ModelBundle, build_model, input_specs
+
+__all__ = ["ModelBundle", "build_model", "input_specs", "factory", "hybrid",
+           "layers", "losses", "mamba2", "rwkv6", "sharding", "transformer"]

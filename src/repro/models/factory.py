@@ -1,0 +1,115 @@
+"""Model factory: one uniform interface over all architecture families.
+
+``build_model(cfg)`` returns a :class:`ModelBundle` whose functions are pure
+(params/caches are explicit pytrees), so ``train_step``/``serve_step`` can be
+jitted/lowered uniformly for every (arch x shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import hybrid, losses, rwkv6, transformer
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init_params: Callable                  # (key) -> params
+    param_specs: Callable                  # () -> logical P tree
+    forward: Callable                      # (params, batch) -> logits
+    loss_fn: Callable                      # (params, batch) -> scalar loss
+    prefill: Callable                      # (params, batch) -> (logits, cache)
+    decode_step: Callable                  # (params, batch, cache) -> (logits, cache)
+    cache_spec: Callable                   # (batch, max_len, seq_axes) -> (shapes, specs)
+
+
+def _module_for(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return transformer
+    if cfg.family == "ssm":
+        return rwkv6
+    if cfg.family == "hybrid":
+        return hybrid
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    mod = _module_for(cfg)
+
+    def loss_fn(params, batch):
+        # Chunked CE: the (B, T, V) logits tensor is never materialized.
+        h = mod.hidden(params, cfg, batch)
+        return losses.chunked_lm_loss(h, params["head"], batch["targets"])
+
+    return ModelBundle(
+        cfg=cfg,
+        init_params=lambda key: mod.init_params(key, cfg)[0],
+        param_specs=lambda: mod.param_specs(cfg),
+        forward=lambda params, batch: mod.forward(params, cfg, batch),
+        loss_fn=loss_fn,
+        prefill=lambda params, batch, **kw: mod.prefill(params, cfg, batch,
+                                                        **kw),
+        decode_step=lambda params, batch, cache: mod.decode_step(
+            params, cfg, batch, cache),
+        cache_spec=lambda batch, max_len, seq_axes=("model",): mod.cache_spec(
+            cfg, batch, max_len, seq_axes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input of a cell
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig
+                ) -> Tuple[Dict, Dict]:
+    """(batch_shapes, batch_logical_specs) for a dry-run cell.
+
+    * train/prefill: full-sequence inputs (+ targets for train).
+    * decode: one new token with a KV cache of ``seq_len`` (cache specs are
+      produced separately via ``ModelBundle.cache_spec``).
+    * vlm: stub patch embeddings for the prefix + text tokens.
+    * audio: stub EnCodec frame embeddings for the full sequence.
+    """
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = L.DEFAULT_DTYPE
+    bspec = P("batch")
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if shape.kind == "decode":
+        if cfg.family == "audio":
+            shapes = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                                     bf16)}
+            specs = {"embeds": P("batch", None, None)}
+        else:
+            shapes = {"tokens": tok((B, 1))}
+            specs = {"tokens": P("batch", None)}
+        return shapes, specs
+
+    shapes: Dict = {}
+    specs: Dict = {}
+    if cfg.family == "vlm":
+        prefix = cfg.prefix_len
+        shapes["embeds"] = jax.ShapeDtypeStruct((B, prefix, cfg.d_model), bf16)
+        shapes["tokens"] = tok((B, T - prefix))
+        specs["embeds"] = P("batch", None, None)
+        specs["tokens"] = P("batch", None)
+    elif cfg.family == "audio":
+        shapes["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), bf16)
+        specs["embeds"] = P("batch", None, None)
+    else:
+        shapes["tokens"] = tok((B, T))
+        specs["tokens"] = P("batch", None)
+    if shape.kind == "train":
+        shapes["targets"] = tok((B, T))
+        specs["targets"] = P("batch", None)
+    return shapes, specs

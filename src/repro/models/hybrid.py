@@ -1,0 +1,181 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): Mamba-2 backbone + one *shared*
+attention block applied every ``attn_every`` layers (weight reuse).
+
+Forward structure (G = n_layers / attn_every groups):
+    for g in range(G):            # lax.scan over groups
+        x = shared_attn_block(x)  # same weights every application
+        for i in range(attn_every):   # inner lax.scan
+            x = mamba2_layer(x)
+
+The shared block keeps a *per-application* KV cache (G caches) even though
+weights are shared.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba2, sharding
+from repro.models import transformer as tf
+
+
+def n_groups(cfg) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def param_specs(cfg) -> Dict:
+    stacked_m = jax.tree.map(lambda s: P(None, *s), mamba2.layer_specs(cfg),
+                             is_leaf=lambda s: isinstance(s, P))
+    return {
+        "embed": P(None, "model"),
+        "mamba": stacked_m,
+        "shared_attn": tf.layer_specs(cfg),
+        "final_norm": P(None),
+        "head": P("fsdp", "model"),
+    }
+
+
+def init_params(key, cfg) -> Tuple[Dict, Dict]:
+    ke, km, ka, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(km, cfg.n_layers)
+    mamba_params = jax.vmap(lambda k: mamba2.init_layer(k, cfg)[0])(layer_keys)
+    shared_params, _ = tf.init_layer(ka, cfg)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(L.DEFAULT_DTYPE),
+        "mamba": mamba_params,
+        "shared_attn": shared_params,
+        "final_norm": L.init_rms_norm(cfg.d_model)[0],
+        "head": L.dense_init(kh, cfg.d_model, cfg.vocab),
+    }
+    return params, param_specs(cfg)
+
+
+def _grouped(tree, G: int, per: int):
+    """Reshape stacked (L, ...) leaves to (G, per, ...)."""
+    return jax.tree.map(lambda x: x.reshape((G, per) + x.shape[1:]), tree)
+
+
+def hidden(params: Dict, cfg, batch: Dict, remat: bool = True) -> jax.Array:
+    x = sharding.sharded_embed_lookup(params["embed"], batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    G = n_groups(cfg)
+    grouped = _grouped(params["mamba"], G, cfg.attn_every)
+
+    def group_body(x, group_params):
+        h, _ = tf._layer_apply(params["shared_attn"], x, cfg, positions,
+                               prefix_len=0)
+
+        def mamba_body(x, lp):
+            out, _ = mamba2.layer_apply(lp, x, cfg)
+            return out, None
+
+        out, _ = jax.lax.scan(mamba_body, h, group_params)
+        return out, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body, policy=L.remat_policy())
+    x, _ = jax.lax.scan(group_body, x, grouped)
+    return L.rms_norm(x, params["final_norm"])
+
+
+def forward(params: Dict, cfg, batch: Dict, remat: bool = True) -> jax.Array:
+    x = hidden(params, cfg, batch, remat)
+    logits = x @ params["head"]
+    return sharding.constrain(logits, "batch", None, "model")
+
+
+def prefill(params: Dict, cfg, batch: Dict,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    x = sharding.sharded_embed_lookup(params["embed"], batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+    B, T = x.shape[0], x.shape[1]
+    S = max_len or T
+    positions = jnp.arange(T)
+    G = n_groups(cfg)
+    grouped = _grouped(params["mamba"], G, cfg.attn_every)
+
+    def group_body(x, group_params):
+        h, kv = tf._layer_apply(params["shared_attn"], x, cfg, positions,
+                                prefix_len=0)
+
+        def mamba_body(x, lp):
+            out, st = mamba2.layer_apply(lp, x, cfg)
+            return out, st
+
+        out, states = jax.lax.scan(mamba_body, h, group_params)
+        return out, (kv["k"], kv["v"], states)
+
+    x, (ks, vs, mstates) = jax.lax.scan(group_body, x, grouped)
+    if S > T:
+        pad = ((0, 0), (0, 0), (0, S - T), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    # mstates leaves are (G, per, B, ...) -> flatten back to (L, B, ...)
+    mstates = jax.tree.map(
+        lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), mstates)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x[:, -1:] @ params["head"]
+    cache = {"k": ks, "v": vs, "mamba": mstates,
+             "index": jnp.asarray(T, jnp.int32)}
+    return sharding.constrain(logits, "batch", None, "model"), cache
+
+
+def decode_step(params: Dict, cfg, batch: Dict, cache: Dict
+                ) -> Tuple[jax.Array, Dict]:
+    x = sharding.sharded_embed_lookup(params["embed"], batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+    idx = cache["index"]
+    positions = idx[None, None] + jnp.zeros((x.shape[0], 1), jnp.int32)
+    G = n_groups(cfg)
+    grouped = _grouped(params["mamba"], G, cfg.attn_every)
+    grouped_m = jax.tree.map(
+        lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]),
+        cache["mamba"])
+
+    def group_body(x, xs):
+        group_params, k_c, v_c, mstate = xs
+        h, new_kv = tf._layer_apply(
+            params["shared_attn"], x, cfg, positions, prefix_len=0,
+            cache={"k": k_c, "v": v_c, "index": idx})
+
+        def mamba_body(x, inp):
+            lp, st = inp
+            out, new_st = mamba2.layer_apply(lp, x, cfg, state=st)
+            return out, new_st
+
+        out, new_mstates = jax.lax.scan(mamba_body, h, (group_params, mstate))
+        return out, (new_kv["k"], new_kv["v"], new_mstates)
+
+    x, (ks, vs, mstates) = jax.lax.scan(
+        group_body, x, (grouped, cache["k"], cache["v"], grouped_m))
+    mstates = jax.tree.map(
+        lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), mstates)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x @ params["head"]
+    new_cache = {"k": ks, "v": vs, "mamba": mstates, "index": idx + 1}
+    return sharding.constrain(logits, "batch", None, "model"), new_cache
+
+
+def cache_spec(cfg, batch: int, max_len: int, seq_axes=("model",)):
+    G = n_groups(cfg)
+    kv_shape = (G, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    arr = jax.ShapeDtypeStruct(kv_shape, L.DEFAULT_DTYPE)
+    seq = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+    kv_spec = P(None, "batch", seq, None, None)
+    m_shapes, m_specs = mamba2.state_spec(cfg, batch)
+    m_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        m_shapes)
+    m_specs = jax.tree.map(lambda s: P(None, *s), m_specs,
+                           is_leaf=lambda s: isinstance(s, P))
+    shapes = {"k": arr, "v": arr, "mamba": m_shapes,
+              "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = {"k": kv_spec, "v": kv_spec, "mamba": m_specs, "index": P()}
+    return shapes, specs

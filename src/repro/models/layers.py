@@ -1,0 +1,528 @@
+"""Shared model layers: norms, RoPE, GQA attention, MLPs, MoE.
+
+Pure-JAX (dict params + apply functions).  Every init function returns
+``(params, specs)`` where ``specs`` mirrors the param tree with tuples of
+logical sharding kinds (resolved by the launcher: 'fsdp' -> data axis,
+'model' -> tensor axis).
+
+Attention is a chunked, online-softmax (flash-style) jnp implementation --
+the same blocking the Pallas TPU kernel in ``repro.kernels.flash_attention``
+uses; ``repro.kernels.flash_attention.ops`` dispatches to the kernel on TPU
+and to this implementation elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Attention block-size knobs (perf hillclimb surface; see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class AttnBlocking:
+    q_block: int = 1024
+    kv_block: int = 1024
+    skip_masked_blocks: bool = False   # causal: skip fully-masked kv blocks
+
+
+_BLOCKING = AttnBlocking()
+
+
+def set_attn_blocking(q_block: int, kv_block: int,
+                      skip_masked_blocks: bool = False) -> None:
+    global _BLOCKING
+    _BLOCKING = AttnBlocking(q_block, kv_block, skip_masked_blocks)
+
+
+def get_attn_blocking() -> AttnBlocking:
+    return _BLOCKING
+
+
+# ---------------------------------------------------------------------------
+# Initializers / norms
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=DEFAULT_DTYPE) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int) -> Tuple[jax.Array, tuple]:
+    return jnp.zeros((d,), jnp.float32), (None,)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, base: float = 10000.0,
+         mode: str = "full") -> jax.Array:
+    """Rotary embedding.  ``mode='half'`` rotates only the first half of the
+    head dims (ChatGLM's 2-d RoPE convention); ``'none'`` is identity.
+
+    x: (B, T, H, dh); positions: (T,) or (B, T).
+    """
+    if mode == "none":
+        return x
+    dh = x.shape[-1]
+    rot = dh if mode == "full" else dh // 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        angles = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        angles = angles[None, :, None, :]                 # (1, T, 1, half)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs
+        angles = angles[:, :, None, :]                    # (B, T, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    rotated = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    if mode == "half":
+        return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (jnp reference; mirrors the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def _block_mask(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+                prefix_len: int, kv_valid_len: Optional[jax.Array]
+                ) -> jax.Array:
+    """(qb, kb) bool mask: True = attend."""
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        if prefix_len > 0:       # prefix-LM: bidirectional over the prefix
+            mask = mask | (kv_pos[None, :] < prefix_len)
+    if kv_valid_len is not None:
+        mask = mask & (kv_pos[None, :] < kv_valid_len)
+    return mask
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, prefix_len: int = 0,
+                    kv_valid_len: Optional[jax.Array] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Chunked online-softmax attention with GQA.
+
+    q: (B, T, Hq, dh); k, v: (B, S, Hkv, dh); Hq % Hkv == 0.
+    Never materializes the (T, S) score matrix: double scan over q-blocks and
+    kv-blocks carrying running (max, denom, acc) in fp32.
+    """
+    blocking = _BLOCKING
+    B, T, Hq, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qb = min(blocking.q_block, T)
+    kb = min(blocking.kv_block, S)
+    # Pad to block multiples.
+    T_pad = (T + qb - 1) // qb * qb
+    S_pad = (S + kb - 1) // kb * kb
+    if T_pad != T:
+        q = jnp.pad(q, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+    if S_pad != S:
+        k = jnp.pad(k, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+    nq, nk = T_pad // qb, S_pad // kb
+    scale = dh ** -0.5
+
+    # (nq, B, qb, Hkv, g, dh)
+    qs = q.reshape(B, nq, qb, Hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kb, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kb, Hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    kv_limit = jnp.asarray(S if kv_valid_len is None else kv_valid_len)
+
+    def q_body(_, iq_and_qblk):
+        iq, qblk = iq_and_qblk
+        q_pos = q_offset + iq * qb + jnp.arange(qb)
+
+        def kv_body(carry, ik_and_kv):
+            m, l, acc = carry
+            ik, kblk, vblk = ik_and_kv
+            kv_pos = ik * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_pos, kv_pos, causal, prefix_len, kv_limit)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # Guard fully-masked rows (m_new == -inf).
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, g, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, qb, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, Hkv, g, qb, dh) -> (B, qb, Hq, dh)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, qb, Hq, dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T_pad, Hq, dh)
+    return out[:, :T]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_len: jax.Array) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, Hq, dh); caches: (B, S, Hkv, dh).  Softmax reductions over the
+    sharded S dim lower to all-reduces (flash-decoding-style combine).
+    """
+    B, _, Hq, dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    qr = q.reshape(B, Hkv, g, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    mask = jnp.arange(S)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg) -> Dict:
+    specs = {
+        "wq": ("fsdp", "model"), "wk": ("fsdp", "model"),
+        "wv": ("fsdp", "model"), "wo": ("model", "fsdp"),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = (None,)
+        specs["k_norm"] = (None,)
+    return specs
+
+
+def init_attention(key, cfg) -> Tuple[Dict, Dict]:
+    d, dh = cfg.d_model, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, d, cfg.n_heads * dh),
+        "wk": dense_init(k2, d, cfg.n_kv_heads * dh),
+        "wv": dense_init(k3, d, cfg.n_kv_heads * dh),
+        "wo": dense_init(k4, cfg.n_heads * dh, d),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = init_rms_norm(dh)[0]
+        params["k_norm"] = init_rms_norm(dh)[0]
+    return params, attention_specs(cfg)
+
+
+init_attention.specs = attention_specs
+
+
+def attention_apply(params: Dict, x: jax.Array, cfg,
+                    positions: jax.Array,
+                    causal: bool = True, prefix_len: int = 0,
+                    cache: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, T, d).  With ``cache`` (decode): T == 1, cache holds
+    k/v (B, S, Hkv, dh) + scalar ``index``; returns updated cache.
+    Without cache: full-sequence flash attention; returns (out, new_kv) where
+    new_kv holds this segment's k/v for prefill cache construction.
+    """
+    B, T, d = x.shape
+    dh = cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, T, cfg.n_heads, dh)
+    k = (x @ params["wk"]).reshape(B, T, cfg.n_kv_heads, dh)
+    v = (x @ params["wv"]).reshape(B, T, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = rope(q, positions, cfg.rope_base, cfg.rope_mode)
+    k = rope(k, positions, cfg.rope_base, cfg.rope_mode)
+    # Only q is head-sharded explicitly; k/v inherit the (Hkv, group)-factored
+    # sharding through the einsum so GQA configs with Hkv < |model| partition
+    # consistently (no conflicting 16-way constraint on an 8-head axis).
+    q = sharding.constrain(q, "batch", None, "model", None)
+    k = sharding.constrain(k, "batch", None, None, None)
+    v = sharding.constrain(v, "batch", None, None, None)
+
+    if cache is not None:
+        idx = cache["index"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+        out = decode_attention(q, k_cache, v_cache, valid_len=idx + 1)
+        new_cache = {"k": k_cache, "v": v_cache, "index": idx + 1}
+    else:
+        out = flash_attention(q, k, v, causal=causal, prefix_len=prefix_len)
+        new_cache = {"k": k, "v": v}
+    out = out.reshape(B, T, cfg.n_heads * dh)
+    out = out @ params["wo"]
+    return sharding.constrain_residual(out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg) -> Dict:
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": ("fsdp", "model"), "w_up": ("fsdp", "model"),
+                "w_down": ("model", "fsdp")}
+    return {"w_in": ("fsdp", "model"), "w_out": ("model", "fsdp")}
+
+
+def init_mlp(key, cfg, d_ff: Optional[int] = None) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        params = {"w_gate": dense_init(ks[0], d, ff),
+                  "w_up": dense_init(ks[1], d, ff),
+                  "w_down": dense_init(ks[2], ff, d)}
+    else:
+        params = {"w_in": dense_init(ks[0], d, ff),
+                  "w_out": dense_init(ks[1], ff, d)}
+    return params, mlp_specs(cfg)
+
+
+init_mlp.specs = mlp_specs
+
+
+def _act(name: str, h: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(h)
+    if name == "sq_relu":                     # squared-ReLU (Nemotron/Primer)
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(name)
+
+
+def mlp_apply(params: Dict, x: jax.Array, cfg) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        out = h @ params["w_down"]
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+        out = h @ params["w_down"]
+    else:
+        out = _act(cfg.act, x @ params["w_in"]) @ params["w_out"]
+    return sharding.constrain_residual(out)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, sort-based dispatch, expert-parallel on "model")
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg) -> Dict:
+    return {
+        "router": (None, None),
+        "w_gate": ("model", "fsdp", None),
+        "w_up": ("model", "fsdp", None),
+        "w_down": ("model", None, "fsdp"),
+    }
+
+
+def init_moe(key, cfg) -> Tuple[Dict, Dict]:
+    d, m = cfg.d_model, cfg.moe
+    ks = jax.random.split(key, 4)
+    e = m.num_experts
+    fe = m.d_expert
+    scale = (1.0 / d) ** 0.5
+
+    def experts(k, d_in, d_out):
+        return (jax.random.normal(k, (e, d_in, d_out)) * scale
+                ).astype(DEFAULT_DTYPE)
+
+    params = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32),
+        "w_gate": experts(ks[1], d, fe),
+        "w_up": experts(ks[2], d, fe),
+        "w_down": experts(ks[3], fe, d),
+    }
+    return params, moe_specs(cfg)
+
+
+init_moe.specs = moe_specs
+
+
+def _expert_ffn(params: Dict, xb: jax.Array, act: str) -> jax.Array:
+    """xb: (..., E, C, d) grouped expert inputs -> same-shaped outputs."""
+    gate = jnp.einsum("...ecd,edf->...ecf", xb, params["w_gate"])
+    up = jnp.einsum("...ecd,edf->...ecf", xb, params["w_up"])
+    if act == "swiglu":
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(gate) * up
+    else:
+        h = _act(act, gate) * up
+    return jnp.einsum("...ecf,efd->...ecd", h, params["w_down"])
+
+
+# Module-level capacity knob (perf hillclimb surface, see EXPERIMENTS §Perf).
+MOE_OPTIONS = {"capacity_factor": 1.25}
+
+
+def set_moe_capacity_factor(cf: float) -> None:
+    MOE_OPTIONS["capacity_factor"] = cf
+
+
+# Remat policy for the layer scan: "nothing" (full remat, min HBM),
+# "dots" (save matmul outputs: no recompute of dots in backward, more HBM).
+REMAT_OPTIONS = {"policy": "nothing"}
+
+
+def set_remat_policy(policy: str) -> None:
+    assert policy in ("nothing", "dots")
+    REMAT_OPTIONS["policy"] = policy
+
+
+def remat_policy():
+    import jax as _jax
+    if REMAT_OPTIONS["policy"] == "dots":
+        return _jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return _jax.checkpoint_policies.nothing_saveable
+
+
+def moe_apply(params: Dict, x: jax.Array, cfg,
+              capacity_factor: Optional[float] = None) -> jax.Array:
+    """Top-k MoE with per-sequence sort-based dispatch.
+
+    Tokens are grouped by batch row (keeps the argsort local to the data
+    shard), scattered into a capacity-bounded (B, E, C, d) buffer that is
+    expert-sharded on the model axis (the resharding lowers to an
+    all-to-all), pushed through the expert FFNs, and combined back with
+    renormalized top-k gates.  Overflowing tokens are dropped (GShard
+    convention).
+
+    Decode (T == 1): per-row grouping would give capacity C=1 per expert per
+    row -- i.e. every token visits every expert slot (E/k-fold waste).  The
+    whole batch is dispatched as ONE group instead (flat path), restoring
+    C = B*k/E*cf.
+    """
+    m = cfg.moe
+    # Dispatch sorts tokens per batch row: keep the full sequence local.
+    x = sharding.constrain(x, "batch", None, None)
+    B, T, d = x.shape
+    if capacity_factor is None:
+        capacity_factor = MOE_OPTIONS["capacity_factor"]
+    E, k = m.num_experts, m.top_k
+    if T == 1:
+        out = _moe_flat(params, x[:, 0], cfg, capacity_factor)
+        return sharding.constrain_residual(out[:, None])
+    C = max(int(T * k / E * capacity_factor + 0.999), 1)
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (B, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = expert_idx.reshape(B, T * k)                   # (B, N)
+    flat_gate = gate_vals.reshape(B, T * k)
+    token_of = jnp.tile(jnp.repeat(jnp.arange(T), k)[None], (B, 1))
+
+    sort_idx = jnp.argsort(flat_expert, axis=-1)                 # local sort
+    sorted_expert = jnp.take_along_axis(flat_expert, sort_idx, -1)
+    sorted_gate = jnp.take_along_axis(flat_gate, sort_idx, -1)
+    sorted_token = jnp.take_along_axis(token_of, sort_idx, -1)
+
+    # Position of each routed token within its expert's slot list.
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E)))(sorted_expert)
+    pos = jnp.arange(T * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_expert, -1)
+    keep = pos < C
+    dest = sorted_expert * C + jnp.minimum(pos, C - 1)           # (B, N)
+
+    gathered = jnp.take_along_axis(
+        x, sorted_token[..., None], axis=1)                      # (B, N, d)
+    gathered = gathered * keep[..., None].astype(x.dtype)
+
+    buf = jnp.zeros((B, E * C, d), x.dtype)
+    buf = jax.vmap(lambda b, dst, g: b.at[dst].add(g))(buf, dest, gathered)
+    buf = buf.reshape(B, E, C, d)
+    buf = sharding.constrain(buf, "batch", "model", None, None)  # all-to-all
+
+    out_buf = _expert_ffn(params, buf, cfg.act)
+    out_buf = sharding.constrain(out_buf, "batch", "model", None, None)
+    out_flat = out_buf.reshape(B, E * C, d)
+
+    back = jnp.take_along_axis(out_flat, dest[..., None], axis=1)  # (B, N, d)
+    back = back * (sorted_gate * keep)[..., None].astype(x.dtype)
+    out = jnp.zeros((B, T, d), x.dtype)
+    out = jax.vmap(lambda o, t, bk: o.at[t].add(bk))(out, sorted_token, back)
+    return sharding.constrain_residual(out)
+
+
+def _moe_flat(params: Dict, x: jax.Array, cfg,
+              capacity_factor: float) -> jax.Array:
+    """Single-group dispatch over the flat (N, d) token batch (decode path)."""
+    m = cfg.moe
+    N, d = x.shape
+    E, k = m.num_experts, m.top_k
+    C = max(int(N * k / E * capacity_factor + 0.999), 1)
+    logits = (x.astype(jnp.float32) @ params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+    flat_expert = expert_idx.reshape(N * k)
+    flat_gate = gate_vals.reshape(N * k)
+    token_of = jnp.repeat(jnp.arange(N), k)
+    sort_idx = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[sort_idx]
+    sorted_gate = flat_gate[sort_idx]
+    sorted_token = token_of[sort_idx]
+    starts = jnp.searchsorted(sorted_expert, jnp.arange(E))
+    pos = jnp.arange(N * k) - starts[sorted_expert]
+    keep = pos < C
+    dest = sorted_expert * C + jnp.minimum(pos, C - 1)
+    gathered = x[sorted_token] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E * C, d), x.dtype).at[dest].add(gathered)
+    # Shard experts on model AND capacity slots on data: otherwise the whole
+    # data axis recomputes every expert redundantly (16x waste at decode).
+    buf = sharding.constrain(buf.reshape(E, C, d), "model", "batch", None)
+    out_buf = _expert_ffn(params, buf, cfg.act)
+    out_buf = sharding.constrain(out_buf, "model", "batch", None)
+    back = out_buf.reshape(E * C, d)[dest] * (
+        sorted_gate * keep)[:, None].astype(x.dtype)
+    return jnp.zeros((N, d), x.dtype).at[sorted_token].add(back)
+
+
+def moe_aux_loss(params: Dict, x: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, expert_idx = jax.lax.top_k(probs, m.top_k)
+    counts = jnp.zeros(m.num_experts).at[expert_idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    frac_probs = probs.mean(axis=(0, 1))
+    return m.num_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,63 @@
+"""Loss functions.
+
+``chunked_lm_loss`` never materializes the full (B, T, V) logits tensor --
+the vocab matmul + cross entropy run per sequence chunk under remat, which is
+what makes 256k-vocab training shapes fit (the full tensor would be TBs for
+nemotron-4-340b at train_4k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Next-token cross entropy.  ``targets`` aligned with ``logits`` positions;
+    positions with target < 0 are ignored (e.g. VLM image prefix)."""
+    logits = logits.astype(jnp.float32)
+    valid = (targets >= 0).astype(jnp.float32)
+    tclip = jnp.maximum(targets, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    # One-hot reduction instead of take_along_axis: partitions cleanly when
+    # the vocab dim is model-sharded (XLA fuses the one-hot into the reduce).
+    onehot = (jnp.arange(logits.shape[-1])[None, None, :]
+              == tclip[..., None])
+    tgt = jnp.sum(logits * onehot, axis=-1)
+    nll = (lse - tgt) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def chunked_lm_loss(hidden: jax.Array, head: jax.Array, targets: jax.Array,
+                    chunk: int = 512) -> jax.Array:
+    """CE over sequence chunks: logits (B, chunk, V) are transient.
+
+    hidden: (B, T, d) final normalized hidden states; head: (d, V).
+    """
+    B, T, d = hidden.shape
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    n = (T + pad) // c
+    hs = hidden.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, t = xs
+        logits = (h @ head).astype(jnp.float32)
+        valid = (t >= 0).astype(jnp.float32)
+        tclip = jnp.maximum(t, 0)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = (jnp.arange(logits.shape[-1])[None, None, :]
+                  == tclip[..., None])
+        tgt = jnp.sum(logits * onehot, axis=-1)
+        nll_sum, n_valid = carry
+        return (nll_sum + ((lse - tgt) * valid).sum(),
+                n_valid + valid.sum()), None
+
+    (nll_sum, n_valid), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ts))
+    return nll_sum / jnp.maximum(n_valid, 1.0)

@@ -1,0 +1,185 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) layer used by the Zamba2 hybrid.
+
+Scalar-per-head decay makes the chunked (matmul/MXU-friendly) form exact and
+numerically safe in fp32: all pairwise decay factors within a chunk are
+exp(c_t - c_s) with c decreasing, so every exponent is <= 0.
+
+Train/prefill: chunked SSD (intra-chunk masked matmul + inter-chunk scan).
+Decode: O(1) recurrent step with conv + SSM state carried in the cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import sharding
+
+CHUNK = 256
+
+
+def dims(cfg):
+    d_in = cfg.ssm.expand * cfg.d_model
+    H = d_in // cfg.ssm.head_dim
+    return d_in, H, cfg.ssm.d_state, cfg.ssm.conv_width
+
+
+def layer_specs(cfg) -> Dict:
+    return {
+        "ln": P(None), "in_proj": P("fsdp", "model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "A_log": P(None), "D": P(None), "dt_bias": P(None),
+        "gn": P("model"), "out_proj": P("model", "fsdp"),
+    }
+
+
+def init_layer(key, cfg) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    d_in, H, ds, cw = dims(cfg)
+    conv_ch = d_in + 2 * ds
+    ks = jax.random.split(key, 4)
+    params = {
+        "ln": L.init_rms_norm(d)[0],
+        "in_proj": L.dense_init(ks[0], d, 2 * d_in + 2 * ds + H),
+        "conv_w": (jax.random.normal(ks[1], (cw, conv_ch)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gn": L.init_rms_norm(d_in)[0],
+        "out_proj": L.dense_init(ks[2], d_in, d),
+    }
+    return params, layer_specs(cfg)
+
+
+def _split_proj(zxbcdt: jax.Array, cfg):
+    d_in, H, ds, _ = dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xin = zxbcdt[..., d_in:2 * d_in]
+    Bc = zxbcdt[..., 2 * d_in:2 * d_in + ds]
+    Cc = zxbcdt[..., 2 * d_in + ds:2 * d_in + 2 * ds]
+    dt = zxbcdt[..., 2 * d_in + 2 * ds:]
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv.  x: (B, T, C); w: (cw, C); prev: (B, cw-1, C)."""
+    cw = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(cw))
+    return jax.nn.silu(out + b[None, None])
+
+
+def _ssd_chunked(xh, Bc, Cc, dt, a, h0):
+    """Chunked SSD.  xh: (B,T,H,dh); Bc/Cc: (B,T,ds); dt: (B,T,H) fp32;
+    a: (H,) negative.  Returns (y (B,T,H,dh), h_final (B,H,dh,ds))."""
+    B, T, H, dh = xh.shape
+    ds = Bc.shape[-1]
+    Lc = min(CHUNK, T)
+    pad = (-T) % Lc
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (T + pad) // Lc
+    xc = xh.reshape(B, nc, Lc, H, dh).transpose(1, 0, 2, 3, 4)
+    Bcc = Bc.reshape(B, nc, Lc, ds).transpose(1, 0, 2, 3)
+    Ccc = Cc.reshape(B, nc, Lc, ds).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nc, Lc, H).transpose(1, 0, 2, 3)
+    dA = dtc * a[None, None, None, :]                    # (nc,B,Lc,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(h, xs):
+        x_n, B_n, C_n, dt_n, cum_n = xs
+        # intra-chunk: scores[b,h,t,s] = (C_t.B_s) e^{cum_t - cum_s} dt_s
+        cb = jnp.einsum("bts,bms->btm", C_n, B_n)        # (B,Lc,Lc)
+        decay = jnp.exp(jnp.clip(
+            cum_n[:, :, None, :] - cum_n[:, None, :, :], -60.0, 0.0))
+        scores = cb[..., None] * decay * dt_n[:, None, :, :]
+        scores = jnp.where(mask[None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, x_n)
+        # cross-chunk: y += C_t e^{cum_t} . h_in
+        y_cross = jnp.einsum("bts,bhds,bth->bthd", C_n, h,
+                             jnp.exp(cum_n))
+        # state: h_out = e^{cum_L} h_in + sum_s e^{cum_L - cum_s} dt_s x_s B_s
+        w_last = jnp.exp(jnp.clip(cum_n[:, -1][:, None] - cum_n, -60.0, 0.0)
+                         ) * dt_n                        # (B,Lc,H)
+        h_new = jnp.exp(cum_n[:, -1])[..., None, None] * h + jnp.einsum(
+            "bsh,bshd,bss2->bhds2".replace("s2", "z"), w_last, x_n, B_n)
+        return h_new, y_intra + y_cross
+
+    h_final, y = jax.lax.scan(chunk_step, h0, (xc, Bcc, Ccc, dtc, cum))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, nc * Lc, H, dh)
+    return y[:, :T], h_final
+
+
+def layer_apply(params: Dict, x: jax.Array, cfg,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    """x: (B, T, d).  state (decode): {"conv": (B,cw-1,ch), "h": (B,H,dh,ds)}."""
+    B, T, d = x.shape
+    d_in, H, ds, cw = dims(cfg)
+    dh = cfg.ssm.head_dim
+    h_in = L.rms_norm(x, params["ln"])
+    zxbcdt = h_in @ params["in_proj"]
+    z, xin, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    prev = state["conv"].astype(conv_in.dtype) if state is not None else None
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"], prev)
+    xin = conv_out[..., :d_in]
+    Bc = conv_out[..., d_in:d_in + ds].astype(jnp.float32)
+    Cc = conv_out[..., d_in + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    xh = xin.astype(jnp.float32).reshape(B, T, H, dh)
+
+    if state is not None:
+        # Recurrent decode step(s): h_t = e^{a dt} h + dt x_t B_t^T.
+        def step(h, inp):
+            x_t, B_t, C_t, dt_t = inp
+            decay = jnp.exp(dt_t * a[None, :])                    # (B,H)
+            upd = jnp.einsum("bhd,bs->bhds", dt_t[..., None] * x_t, B_t)
+            h = decay[..., None, None] * h + upd
+            y = jnp.einsum("bhds,bs->bhd", h, C_t)
+            return h, y
+        xs = (xh.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2),
+              Cc.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+        h_final, y = jax.lax.scan(step, state["h"].astype(jnp.float32), xs)
+        y = y.transpose(1, 0, 2, 3)
+    else:
+        h0 = jnp.zeros((B, H, dh, ds), jnp.float32)
+        y, h_final = _ssd_chunked(xh, Bc, Cc, dt, a, h0)
+
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, params["gn"])
+    out = y @ params["out_proj"]
+    out = sharding.constrain(out, "batch", None, None)
+    conv_state = jnp.concatenate(
+        [state["conv"].astype(conv_in.dtype) if state is not None else
+         jnp.zeros((B, cw - 1, conv_in.shape[-1]), conv_in.dtype),
+         conv_in], axis=1)[:, -(cw - 1):]
+    return x + out, {"conv": conv_state.astype(L.DEFAULT_DTYPE),
+                     "h": h_final}
+
+
+def state_spec(cfg, batch: int):
+    d_in, H, ds, cw = dims(cfg)
+    dh = cfg.ssm.head_dim
+    ch = d_in + 2 * ds
+    shapes = {"conv": jax.ShapeDtypeStruct((batch, cw - 1, ch),
+                                           L.DEFAULT_DTYPE),
+              "h": jax.ShapeDtypeStruct((batch, H, dh, ds), jnp.float32)}
+    specs = {"conv": P("batch", None, "model"),
+             "h": P("batch", "model", None, None)}
+    return shapes, specs

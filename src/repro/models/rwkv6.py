@@ -1,0 +1,346 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Time-mix: data-dependent token-shift lerps (ddlerp LoRA), per-channel decay
+``w = exp(-exp(w0 + lora(x)))``, per-head matrix state
+``S_t = diag(w_t) S_{t-1} + k_t v_t^T``, output ``o_t = r_t (S_{t-1} +
+diag(u) k_t v_t^T)``.  Channel-mix: squared-ReLU gated FFN.
+
+Two sequence-mix execution modes:
+  * ``scan``    -- exact sequential ``lax.scan`` over time (default; O(1)
+    state, numerically exact, the decode path uses the same step).
+  * ``chunked`` -- MXU-friendly chunked linear attention (intra-chunk matmul
+    with per-channel decay factorized in fp32 + inter-chunk scan).  This is
+    the TPU-native production mode (see EXPERIMENTS.md §Perf); within-chunk
+    decay products are bounded by chunk length, so fp32 is safe for the
+    decay ranges RWKV-6 trains into (|log w| <~ 1) at chunk 64.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import sharding
+
+DDLERP_DIM = 32
+DECAY_LORA_DIM = 64
+# Default "chunked": backward through a per-step scan would store O(T) state
+# snapshots (43GB/layer at train_4k); the chunked form stores O(T/chunk).
+SEQ_MODE = {"mode": "chunked", "chunk": 64}
+
+
+def set_seq_mode(mode: str, chunk: int = 64) -> None:
+    SEQ_MODE["mode"] = mode
+    SEQ_MODE["chunk"] = chunk
+
+
+def layer_specs(cfg) -> Dict:
+    return {
+        "ln1": P(None), "ln2": P(None), "mu_x": P(None), "mu": P(None, None),
+        "ddlerp_a": P(None, None), "ddlerp_b": P(None, None, None),
+        "w0": P(None), "w_lora_a": P(None, None), "w_lora_b": P(None, None),
+        "u": P(None),
+        "wr": P("fsdp", "model"), "wk": P("fsdp", "model"),
+        "wv": P("fsdp", "model"), "wg": P("fsdp", "model"),
+        "wo": P("model", "fsdp"), "gn": P(None),
+        "cm_mu_k": P(None), "cm_mu_r": P(None),
+        "cm_wk": P("fsdp", "model"), "cm_wv": P("model", "fsdp"),
+        "cm_wr": P("fsdp", "model"),
+    }
+
+
+def param_specs(cfg) -> Dict:
+    stacked = jax.tree.map(lambda s: P(None, *s), layer_specs(cfg),
+                           is_leaf=lambda s: isinstance(s, P))
+    return {"embed": P(None, "model"), "layers": stacked,
+            "final_norm": P(None), "head": P("fsdp", "model")}
+
+
+def init_layer(key, cfg) -> Tuple[Dict, Dict]:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    small = lambda k, *shape: (jax.random.normal(k, shape) * 0.02).astype(
+        jnp.float32)
+    params = {
+        "ln1": L.init_rms_norm(d)[0],
+        "ln2": L.init_rms_norm(d)[0],
+        "mu_x": small(ks[0], d),
+        "mu": small(ks[1], 5, d),
+        "ddlerp_a": small(ks[2], d, DDLERP_DIM),
+        "ddlerp_b": small(ks[3], 5, DDLERP_DIM, d),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_lora_a": small(ks[4], d, DECAY_LORA_DIM),
+        "w_lora_b": small(ks[5], DECAY_LORA_DIM, d),
+        "u": small(ks[6], d),
+        "wr": L.dense_init(ks[7], d, d),
+        "wk": L.dense_init(ks[8], d, d),
+        "wv": L.dense_init(ks[9], d, d),
+        "wg": L.dense_init(ks[10], d, d),
+        "wo": L.dense_init(ks[11], d, d),
+        "gn": L.init_rms_norm(d)[0],
+        "cm_mu_k": small(ks[0], d),
+        "cm_mu_r": small(ks[1], d),
+        "cm_wk": L.dense_init(ks[2], d, ff),
+        "cm_wv": L.dense_init(ks[3], ff, d),
+        "cm_wr": L.dense_init(ks[4], d, d),
+    }
+    return params, layer_specs(cfg)
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros -- or ``prev`` -- at t=0)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _ddlerp(params: Dict, x: jax.Array, xx: jax.Array) -> Tuple[jax.Array, ...]:
+    """Data-dependent lerps for [w, k, v, r, g] (RWKV-6 ddlerp)."""
+    dx = xx - x
+    base = x + dx * params["mu_x"]
+    dd = jnp.tanh(base.astype(jnp.float32) @ params["ddlerp_a"])
+    dds = jnp.einsum("btk,ikd->ibtd", dd, params["ddlerp_b"])
+    mixed = x[None] + dx[None] * (params["mu"][:, None, None, :] + dds
+                                  ).astype(x.dtype)
+    return tuple(mixed[i] for i in range(5))
+
+
+def _wkv_scan(r, k, v, w, u, dh: int):
+    """Exact sequential recurrence.  r/k/v/w: (B, T, H, dh) fp32."""
+    B, T, H, _ = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,dk,dv)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, o
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    S_final, o = jax.lax.scan(step, S0, xs)
+    return o.transpose(1, 0, 2, 3), S_final                 # (B,T,H,dh), state
+
+
+def _wkv_chunked(r, k, v, w, u, dh: int, chunk: int):
+    """Chunked linear attention with per-channel decay (fp32 factorized).
+
+    Within a chunk of length Lc: with c[t] = sum_{tau<=t} log w_tau (<= 0),
+      o_t = r_t c_exp[t-1] . S_in                       (cross)
+          + sum_{s<t} (r_t e^{c[t-1]-c[s]} . k_s) v_s   (intra, strictly lower)
+          + (r_t . u k_t) v_t                           (diagonal bonus)
+    factorized as a = r_t * e^{c[t-1]}, b = k_s * e^{-c[s]} -- valid while
+    |c| stays moderate within a chunk (chunk<=64 for RWKV-scale decays).
+    """
+    B, T, H, _ = r.shape
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nc = (T + pad) // Lc
+    resh = lambda x: x.reshape(B, nc, Lc, H, dh).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)     # (nc,B,Lc,H,dh)
+    logw = jnp.log(jnp.maximum(wc, 1e-12))
+    c = jnp.cumsum(logw, axis=2)                            # (nc,B,Lc,H,dh)
+    c_prev = c - logw                                       # c[t-1]
+    a = rc * jnp.exp(c_prev)
+    b = kc * jnp.exp(-c)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool), k=-1)
+
+    def chunk_step(S, xs):
+        a_n, b_n, rc_n, kc_n, vc_n, c_n, c_prev_n, logw_n = xs
+        # cross: o = r e^{c_prev} . S_in
+        o_cross = jnp.einsum("blhk,bhkv->blhv", a_n, S)
+        # intra (strictly lower triangular)
+        att = jnp.einsum("blhk,bmhk->bhlm", a_n, b_n)
+        att = jnp.where(mask[None, None], att, 0.0)
+        o_intra = jnp.einsum("bhlm,bmhv->blhv", att, vc_n)
+        # diagonal bonus
+        o_diag = jnp.einsum("blhk,blhk,blhv->blhv",
+                            rc_n, u[None, None] * kc_n, vc_n)
+        # state update: S_out = e^{c[L-1]} S_in + sum_s e^{c[L-1]-c[s]} k_s v_s
+        decay_last = jnp.exp(c_n[:, -1])                    # (B,H,dh)
+        kd = kc_n * jnp.exp(c_n[:, -1][:, None] - c_n)
+        S_new = decay_last[..., None] * S + jnp.einsum(
+            "blhk,blhv->bhkv", kd, vc_n)
+        return S_new, o_cross + o_intra + o_diag
+
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    S_final, o = jax.lax.scan(chunk_step, S0,
+                              (a, b, rc, kc, vc, c, c_prev, logw))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, nc * Lc, H, dh)
+    return o[:, :T], S_final
+
+
+def time_mix(params: Dict, x: jax.Array, cfg,
+             state: Optional[Dict] = None
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, final_wkv_state, last_x)."""
+    B, T, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    prev = state["tm_shift"] if state is not None else None
+    xx = _shift(x, prev)
+    xw, xk, xv, xr, xg = _ddlerp(params, x, xx)
+    w = jnp.exp(-jnp.exp(
+        params["w0"] + jnp.tanh(xw.astype(jnp.float32) @ params["w_lora_a"])
+        @ params["w_lora_b"]))                              # (B,T,d) in (0,1)
+    r = xr @ params["wr"]
+    k = xk @ params["wk"]
+    v = xv @ params["wv"]
+    g = jax.nn.silu(xg @ params["wg"])
+    # The recurrence runs replicated over the model axis (heads=40 do not
+    # divide the 16-way tensor axis; see DESIGN.md) -- batch stays sharded.
+    to_heads = lambda t: t.astype(jnp.float32).reshape(B, T, H, dh)
+    u = params["u"].reshape(H, dh)
+    rh, kh, vh, wh = map(to_heads, (r, k, v, w))
+    if state is not None:
+        # Decode path: exact single/short-step scan from carried state.
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[..., :, None] * v_t[..., None, :]
+            o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+            S = w_t[..., :, None] * S + kv
+            return S, o
+        xs = tuple(a.transpose(1, 0, 2, 3) for a in (rh, kh, vh, wh))
+        S_final, o = jax.lax.scan(step, state["wkv"].astype(jnp.float32), xs)
+        o = o.transpose(1, 0, 2, 3)
+    elif SEQ_MODE["mode"] == "chunked":
+        o, S_final = _wkv_chunked(rh, kh, vh, wh, u, dh, SEQ_MODE["chunk"])
+    else:
+        o, S_final = _wkv_scan(rh, kh, vh, wh, u, dh)
+    o = o.reshape(B, T, H, dh)
+    # Per-head group norm.
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 1e-5)
+    o = o.reshape(B, T, d) * (1.0 + params["gn"])
+    out = (o.astype(x.dtype) * g) @ params["wo"]
+    return sharding.constrain(out, "batch", None, None), S_final, x[:, -1]
+
+
+def channel_mix(params: Dict, x: jax.Array,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, jax.Array]:
+    prev = state["cm_shift"] if state is not None else None
+    xx = _shift(x, prev)
+    dx = xx - x
+    xk = x + dx * params["cm_mu_k"].astype(x.dtype)
+    xr = x + dx * params["cm_mu_r"].astype(x.dtype)
+    kk = jax.nn.relu(xk @ params["cm_wk"])
+    kk = kk * kk
+    out = jax.nn.sigmoid(xr @ params["cm_wr"]) * (kk @ params["cm_wv"])
+    return sharding.constrain(out, "batch", None, None), x[:, -1]
+
+
+def layer_apply(params: Dict, x: jax.Array, cfg,
+                state: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Dict]:
+    h, wkv, tm_last = time_mix(params, L.rms_norm(x, params["ln1"]), cfg,
+                               state)
+    x = x + h
+    h2, cm_last = channel_mix(params, L.rms_norm(x, params["ln2"]), state)
+    x = x + h2
+    return x, {"wkv": wkv, "tm_shift": tm_last, "cm_shift": cm_last}
+
+
+def init_params(key, cfg) -> Tuple[Dict, Dict]:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layer_params = jax.vmap(lambda k: init_layer(k, cfg)[0])(layer_keys)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(L.DEFAULT_DTYPE),
+        "layers": layer_params,
+        "final_norm": L.init_rms_norm(cfg.d_model)[0],
+        "head": L.dense_init(kh, cfg.d_model, cfg.vocab),
+    }
+    return params, param_specs(cfg)
+
+
+def hidden(params: Dict, cfg, batch: Dict, remat: bool = True) -> jax.Array:
+    x = sharding.sharded_embed_lookup(params["embed"], batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+
+    def body(x, layer_params):
+        out, _ = layer_apply(layer_params, x, cfg)
+        return out, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=L.remat_policy())
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rms_norm(x, params["final_norm"])
+
+
+def forward(params: Dict, cfg, batch: Dict, remat: bool = True) -> jax.Array:
+    x = hidden(params, cfg, batch, remat)
+    logits = x @ params["head"]
+    return sharding.constrain(logits, "batch", None, "model")
+
+
+def prefill(params: Dict, cfg, batch: Dict,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    x = sharding.sharded_embed_lookup(params["embed"], batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+
+    def body(x, layer_params):
+        out, st = layer_apply(layer_params, x, cfg)
+        return out, st
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x[:, -1:] @ params["head"]
+    cache = dict(states)
+    cache["index"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+    return sharding.constrain(logits, "batch", None, "model"), cache
+
+
+def decode_step(params: Dict, cfg, batch: Dict, cache: Dict
+                ) -> Tuple[jax.Array, Dict]:
+    x = sharding.sharded_embed_lookup(params["embed"], batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+
+    def body(x, xs):
+        layer_params, wkv, tm_s, cm_s = xs
+        out, st = layer_apply(layer_params, x, cfg,
+                              state={"wkv": wkv, "tm_shift": tm_s,
+                                     "cm_shift": cm_s})
+        return out, (st["wkv"], st["tm_shift"], st["cm_shift"])
+
+    x, (wkv, tm_s, cm_s) = jax.lax.scan(
+        body, x, (params["layers"], cache["wkv"], cache["tm_shift"],
+                  cache["cm_shift"]))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x @ params["head"]
+    new_cache = {"wkv": wkv, "tm_shift": tm_s, "cm_shift": cm_s,
+                 "index": cache["index"] + 1}
+    return sharding.constrain(logits, "batch", None, "model"), new_cache
+
+
+def cache_spec(cfg, batch: int, max_len: int, seq_axes=("model",)):
+    """RWKV decode state is O(1) in sequence length."""
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    Lr = cfg.n_layers
+    shapes = {
+        "wkv": jax.ShapeDtypeStruct((Lr, batch, H, dh, dh), jnp.float32),
+        "tm_shift": jax.ShapeDtypeStruct((Lr, batch, d), L.DEFAULT_DTYPE),
+        "cm_shift": jax.ShapeDtypeStruct((Lr, batch, d), L.DEFAULT_DTYPE),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    specs = {
+        "wkv": P(None, "batch", None, None, None),
+        "tm_shift": P(None, "batch", None),
+        "cm_shift": P(None, "batch", None),
+        "index": P(),
+    }
+    return shapes, specs

@@ -1,0 +1,131 @@
+"""Mesh context + activation sharding constraints for model code.
+
+Model code annotates activations with *logical* kinds ("batch", "model",
+None); the launcher installs a mesh context mapping batch-like dims to the
+data axes ("data", or ("pod","data") multi-pod) and the tensor dim to
+"model".  Without a context (CPU smoke tests) the constraints are no-ops.
+
+Parameters use 2-D (fsdp x tensor) sharding: the tensor-parallel dim of every
+weight is sharded on "model"; the other large dim is sharded on "data"
+(ZeRO-3/FSDP style -- XLA all-gathers it just before use and the gradient
+reduce-scatters back).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp_axis: Optional[str] = "data"     # param FSDP axis (None = off)
+    seq_parallel: bool = False            # Megatron-style sequence parallelism
+
+
+_CTX = MeshContext()
+
+
+def set_mesh(mesh: Optional[Mesh], batch_axes: Sequence[str] = ("data",),
+             model_axis: str = "model",
+             fsdp_axis: Optional[str] = "data",
+             seq_parallel: bool = False) -> None:
+    global _CTX
+    _CTX = MeshContext(mesh, tuple(batch_axes), model_axis, fsdp_axis,
+                       seq_parallel)
+
+
+def get_ctx() -> MeshContext:
+    return _CTX
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], batch_axes: Sequence[str] = ("data",),
+                 model_axis: str = "model",
+                 fsdp_axis: Optional[str] = "data"):
+    global _CTX
+    prev = _CTX
+    set_mesh(mesh, batch_axes, model_axis, fsdp_axis)
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
+def _resolve(kind) -> object:
+    if kind is None:
+        return None
+    if kind == "batch":
+        axes = _CTX.batch_axes
+        return axes if len(axes) > 1 else axes[0]
+    if kind == "model":
+        return _CTX.model_axis
+    if kind == "fsdp":
+        return _CTX.fsdp_axis
+    raise ValueError(f"unknown sharding kind {kind!r}")
+
+
+def spec(*kinds) -> P:
+    """Build a PartitionSpec from logical kinds ('batch'|'model'|'fsdp'|None)."""
+    return P(*[_resolve(k) for k in kinds])
+
+
+def constrain(x: jax.Array, *kinds) -> jax.Array:
+    """with_sharding_constraint by logical kinds; no-op without a mesh."""
+    if _CTX.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec(*kinds)))
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    """Residual-stream (B, T, d) constraint.  With sequence parallelism the
+    T dim is sharded on the tensor axis (Megatron SP); the surrounding
+    attention/MoE constraints make XLA insert the all-gather/reduce-scatter
+    pair exactly around the token-mixing ops."""
+    if _CTX.mesh is None:
+        return x
+    t_axis = _CTX.model_axis if _CTX.seq_parallel else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec("batch", t_axis and "model", None)))
+
+
+def named(spec_: P) -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    return NamedSharding(_CTX.mesh, spec_)
+
+
+def sharded_embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Embedding gather with a (vocab, d/|model|)-sharded table via shard_map.
+
+    Every device gathers full-vocab rows for its own d-slice: zero
+    collectives, and it sidesteps an XLA SPMD bug where resharding a
+    partitioned gather output emits an invalid dynamic-slice.  Output is
+    (B, T, d) sharded (batch, None, model).
+    """
+    if _CTX.mesh is None:
+        return jnp.take(table, tokens, axis=0)
+    n_batch = 1
+    for ax in _CTX.batch_axes:
+        n_batch *= _CTX.mesh.shape[ax]
+    if tokens.shape[0] % n_batch == 0:
+        batch = (_CTX.batch_axes if len(_CTX.batch_axes) > 1
+                 else _CTX.batch_axes[0])
+    else:
+        batch = None        # tiny batches (e.g. long-context B=1): replicate
+    f = jax.shard_map(
+        lambda tbl, tok: jnp.take(tbl, tok, axis=0),
+        mesh=_CTX.mesh,
+        in_specs=(P(None, _CTX.model_axis), P(batch, None)),
+        out_specs=P(batch, None, _CTX.model_axis),
+        check_vma=False,
+    )
+    return f(table, tokens)

@@ -1,0 +1,194 @@
+"""Decoder-only transformer covering the dense / MoE / VLM / audio families.
+
+One flexible implementation driven by ``ArchConfig``:
+  * GQA attention (+ optional qk-norm), RoPE full/half/none
+  * SwiGLU / GeGLU / squared-ReLU / GELU MLP, or top-k MoE
+  * token-embedding input, stub-frontend embedding input (audio), or
+    mixed prefix-embedding + tokens (VLM prefix-LM with bidirectional prefix)
+  * scan-over-layers with full remat (``nothing_saveable``) for training
+  * functional KV-cache prefill/decode
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import sharding
+
+# Logical spec names: "fsdp" -> data axes (ZeRO-style), "model" -> tensor axis,
+# "batch" -> data axes for activations.  Resolved by launch/mesh.py.
+
+
+def layer_specs(cfg) -> Dict:
+    attn_s = {k: P(*v) for k, v in L.init_attention.specs(cfg).items()}
+    specs = {"attn": attn_s, "ln1": P(None), "ln2": P(None)}
+    if cfg.moe is not None:
+        specs["moe"] = {k: P(*v) for k, v in L.init_moe.specs(cfg).items()}
+    else:
+        specs["mlp"] = {k: P(*v) for k, v in L.init_mlp.specs(cfg).items()}
+    return specs
+
+
+def init_layer(key, cfg) -> Tuple[Dict, Dict]:
+    k1, k2 = jax.random.split(key)
+    attn_p, _ = L.init_attention(k1, cfg)
+    params = {"attn": attn_p,
+              "ln1": L.init_rms_norm(cfg.d_model)[0],
+              "ln2": L.init_rms_norm(cfg.d_model)[0]}
+    if cfg.moe is not None:
+        params["moe"] = L.init_moe(k2, cfg)[0]
+    else:
+        params["mlp"] = L.init_mlp(k2, cfg)[0]
+    return params, layer_specs(cfg)
+
+
+def param_specs(cfg) -> Dict:
+    stacked = jax.tree.map(lambda s: P(None, *s), layer_specs(cfg),
+                           is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": P(None, "model"),
+        "layers": stacked,
+        "final_norm": P(None),
+        "head": P("fsdp", "model"),
+    }
+
+
+def init_params(key, cfg) -> Tuple[Dict, Dict]:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layer_params = jax.vmap(lambda k: init_layer(k, cfg)[0])(layer_keys)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(L.DEFAULT_DTYPE),
+        "layers": layer_params,
+        "final_norm": L.init_rms_norm(cfg.d_model)[0],
+        "head": L.dense_init(kh, cfg.d_model, cfg.vocab),
+    }
+    return params, param_specs(cfg)
+
+
+def _layer_apply(layer_params: Dict, x: jax.Array, cfg,
+                 positions: jax.Array, prefix_len: int,
+                 cache: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    h, new_cache = L.attention_apply(
+        layer_params["attn"], L.rms_norm(x, layer_params["ln1"]), cfg,
+        positions, causal=True, prefix_len=prefix_len, cache=cache)
+    x = x + h
+    h2 = L.rms_norm(x, layer_params["ln2"])
+    if cfg.moe is not None:
+        x = x + L.moe_apply(layer_params["moe"], h2, cfg)
+    else:
+        x = x + L.mlp_apply(layer_params["mlp"], h2, cfg)
+    return x, new_cache
+
+
+def _gather_embed(params: Dict, tokens: jax.Array) -> jax.Array:
+    return sharding.sharded_embed_lookup(params["embed"], tokens)
+
+
+def _embed_input(params: Dict, cfg, batch: Dict) -> jax.Array:
+    """Build the input activation stream for any input modality."""
+    if cfg.family == "audio":
+        x = batch["embeds"].astype(L.DEFAULT_DTYPE)
+    elif cfg.family == "vlm":
+        tok_emb = _gather_embed(params, batch["tokens"])
+        x = jnp.concatenate(
+            [batch["embeds"].astype(L.DEFAULT_DTYPE), tok_emb], axis=1)
+    else:
+        x = _gather_embed(params, batch["tokens"])
+    return sharding.constrain_residual(x)
+
+
+def hidden(params: Dict, cfg, batch: Dict, remat: bool = True) -> jax.Array:
+    """Full-sequence forward up to the final norm; returns (B, T, d)."""
+    x = _embed_input(params, cfg, batch)
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    prefix_len = cfg.prefix_len if cfg.family == "vlm" else 0
+
+    def body(x, layer_params):
+        out, _ = _layer_apply(layer_params, x, cfg, positions, prefix_len)
+        return out, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=L.remat_policy())
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rms_norm(x, params["final_norm"])
+
+
+def forward(params: Dict, cfg, batch: Dict,
+            remat: bool = True) -> jax.Array:
+    """Full-sequence forward; returns logits (B, T, V)."""
+    x = hidden(params, cfg, batch, remat)
+    logits = x @ params["head"]
+    return sharding.constrain(logits, "batch", None, "model")
+
+
+def prefill(params: Dict, cfg, batch: Dict, max_len: Optional[int] = None
+            ) -> Tuple[jax.Array, Dict]:
+    """Forward returning a KV cache (padded to ``max_len``) for decoding."""
+    x = _embed_input(params, cfg, batch)
+    B, T = x.shape[0], x.shape[1]
+    S = max_len or T
+    positions = jnp.arange(T)
+    prefix_len = cfg.prefix_len if cfg.family == "vlm" else 0
+
+    def body(x, layer_params):
+        out, kv = _layer_apply(layer_params, x, cfg, positions, prefix_len)
+        return out, (kv["k"], kv["v"])
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    if S > T:
+        pad = ((0, 0), (0, 0), (0, S - T), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = {"k": ks, "v": vs, "index": jnp.asarray(T, jnp.int32)}
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x[:, -1:] @ params["head"]
+    return sharding.constrain(logits, "batch", None, "model"), cache
+
+
+def decode_step(params: Dict, cfg, batch: Dict, cache: Dict
+                ) -> Tuple[jax.Array, Dict]:
+    """One-token decode against a stacked-layer KV cache.
+
+    cache: {"k"/"v": (L, B, S, Hkv, dh), "index": int32 scalar}.
+    """
+    if cfg.family == "audio":
+        x = batch["embeds"].astype(L.DEFAULT_DTYPE)
+    else:
+        x = _gather_embed(params, batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+    idx = cache["index"]
+    positions = idx[None, None] + jnp.zeros((x.shape[0], 1), jnp.int32)
+
+    def body(x, xs):
+        layer_params, k_c, v_c = xs
+        out, new_cache = _layer_apply(
+            layer_params, x, cfg, positions, prefix_len=0,
+            cache={"k": k_c, "v": v_c, "index": idx})
+        return out, (new_cache["k"], new_cache["v"])
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x @ params["head"]
+    new_cache = {"k": ks, "v": vs, "index": idx + 1}
+    return sharding.constrain(logits, "batch", None, "model"), new_cache
+
+
+def cache_spec(cfg, batch: int, max_len: int,
+               seq_axes=("model",)) -> Tuple[Dict, Dict]:
+    """ShapeDtypeStructs + logical PartitionSpecs for the decode cache."""
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    arr = jax.ShapeDtypeStruct(shape, L.DEFAULT_DTYPE)
+    kv_spec = P(None, "batch", seq_axes if len(seq_axes) > 1 else seq_axes[0],
+                None, None)
+    shapes = {"k": arr, "v": arr,
+              "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = {"k": kv_spec, "v": kv_spec, "index": P()}
+    return shapes, specs

@@ -1,0 +1,7 @@
+"""Serving substrate: prefill/decode steps, greedy generation, batching."""
+from repro.serve import batching, serve_loop
+from repro.serve.batching import Request, SlotBatcher
+from repro.serve.serve_loop import build_serve_fns, greedy_generate
+
+__all__ = ["Request", "SlotBatcher", "build_serve_fns", "greedy_generate",
+           "batching", "serve_loop"]

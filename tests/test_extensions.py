@@ -1,0 +1,70 @@
+"""Tests for the §VIII / appendix extensions (multi-copy, asymmetric 2-state)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.extensions import (MultiCopyDUMTS, offline_two_state,
+                                   two_state_asymmetric)
+
+
+def _rotating_costs(T, n, seed=0, period=150):
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.3, 1.0, size=(T, n))
+    for t in range(T):
+        costs[t, (t // period) % n] = rng.uniform(0.0, 0.1)
+    return costs
+
+
+def test_multicopy_dominates_single_copy_on_query_cost():
+    """Holding 2 copies can only lower per-query cost vs 1 copy (same seed)."""
+    T, n = 1200, 4
+    costs = _rotating_costs(T, n)
+    totals = {}
+    for kappa in (1, 2, 3):
+        d = MultiCopyDUMTS(alpha=20.0, initial_states=range(n), kappa=kappa,
+                           seed=0)
+        q = 0.0
+        for t in range(T):
+            _, c = d.observe({i: float(costs[t, i]) for i in range(n)})
+            q += c
+        totals[kappa] = (q, d.total_reorg_cost)
+    assert totals[2][0] <= totals[1][0]
+    assert totals[3][0] <= totals[2][0]
+
+
+def test_multicopy_held_set_is_valid():
+    d = MultiCopyDUMTS(alpha=5.0, initial_states=[0, 1, 2], kappa=2, seed=1)
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        d.observe({i: float(rng.uniform(0, 1)) for i in sorted(d.states)})
+        assert len(d.held) == 2
+        assert all(h in d.states for h in d.held)
+    d.add_state(7)
+    d.observe({i: 0.5 for i in sorted(d.states)})
+    assert 7 in d.states
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 200), alpha_ab=st.floats(1.0, 20.0),
+       alpha_ba=st.floats(1.0, 20.0))
+def test_two_state_asymmetric_competitive(seed, alpha_ab, alpha_ba):
+    """Online two-state cost <= 3 * OPT + switch-cost additive slack."""
+    rng = np.random.default_rng(seed)
+    T = 400
+    a = rng.uniform(0, 1, T)
+    b = rng.uniform(0, 1, T)
+    # epochs where one state is clearly better
+    a[100:200] *= 0.05
+    b[250:350] *= 0.05
+    online, seq = two_state_asymmetric(a, b, alpha_ab, alpha_ba)
+    opt = offline_two_state(a, b, alpha_ab, alpha_ba)
+    assert len(seq) == T
+    assert online <= 3.0 * opt + (alpha_ab + alpha_ba)
+
+
+def test_two_state_tracks_cheap_state():
+    a = np.full(300, 0.9)
+    b = np.full(300, 0.1)
+    total, seq = two_state_asymmetric(a, b, 5.0, 5.0)
+    assert seq[-1] == 1                      # settled in the cheap state
+    assert total < 0.9 * 300                 # beat staying put

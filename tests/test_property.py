@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DynamicUMTS, layouts
+from repro.core.mts import theorem_iv1_bound
+from repro.core.sampling import RTBSample, ReservoirSample, SlidingWindow
+
+
+# ---------------------------------------------------------------------------
+# D-UMTS invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_states=st.integers(2, 6),
+    alpha=st.floats(2.0, 50.0),
+    seed=st.integers(0, 100),
+    costs=st.lists(st.lists(st.floats(0.0, 1.0), min_size=6, max_size=6),
+                   min_size=20, max_size=120),
+)
+def test_dumts_invariants(n_states, alpha, seed, costs):
+    d = DynamicUMTS(alpha=alpha, initial_states=list(range(n_states)),
+                    seed=seed)
+    for row in costs:
+        s = d.observe({i: row[i] for i in range(n_states)})
+        # invariant 1: current state is always a live state
+        assert s in d.states
+        # invariant 2: active states have counters strictly below alpha
+        assert all(d.counters[a] < alpha for a in d.active)
+        # invariant 3: the active set is never empty after observe
+        assert d.active
+        # invariant 4: counters are monotonically nonnegative
+        assert all(c >= 0.0 for c in d.counters.values())
+    # invariant 5: competitive-ratio bookkeeping
+    assert d.competitive_bound() >= 2.0
+    assert d.max_state_space >= n_states
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    alpha=st.floats(2.0, 20.0),
+    seed=st.integers(0, 50),
+    ops=st.lists(st.tuples(st.sampled_from(["add", "remove", "query"]),
+                           st.integers(0, 9)), min_size=10, max_size=80),
+)
+def test_dumts_dynamic_state_space(alpha, seed, ops):
+    """Arbitrary interleaving of add/remove/query keeps the system sound."""
+    d = DynamicUMTS(alpha=alpha, initial_states=[0], seed=seed)
+    rng = np.random.default_rng(seed)
+    next_id = 1
+    for op, _arg in ops:
+        if op == "add":
+            d.add_state(next_id)
+            next_id += 1
+        elif op == "remove" and len(d.states) > 1:
+            victims = [s for s in sorted(d.states)]
+            d.remove_state(victims[_arg % len(victims)])
+        else:
+            known = sorted(d.states | d.pending_additions)
+            d.observe({s: float(rng.uniform(0, 1)) for s in known})
+        assert d.current_state in d.states
+        assert d.active.issubset(d.states)
+
+
+# ---------------------------------------------------------------------------
+# Zone-map cost model invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_parts=st.integers(1, 20),
+    n_cols=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+def test_eval_cost_bounds_and_monotonicity(n_parts, n_cols, seed):
+    rng = np.random.default_rng(seed)
+    mins = rng.uniform(0, 1, (n_parts, n_cols))
+    maxs = mins + rng.uniform(0, 1, (n_parts, n_cols))
+    rows = rng.integers(1, 100, n_parts).astype(np.float64)
+    meta = layouts.PartitionMetadata(mins=mins, maxs=maxs, rows=rows)
+    lo = rng.uniform(-1, 1, n_cols)
+    hi = lo + rng.uniform(0, 1, n_cols)
+    c = float(layouts.eval_cost(meta, lo, hi))
+    assert 0.0 <= c <= 1.0
+    # widening the query can only scan more
+    c_wide = float(layouts.eval_cost(meta, lo - 0.5, hi + 0.5))
+    assert c_wide >= c - 1e-12
+    # the full-space query scans everything
+    full = float(layouts.eval_cost(meta, np.full(n_cols, -np.inf),
+                                   np.full(n_cols, np.inf)))
+    assert full == 1.0
+    # skipped + scanned = 1
+    assert float(layouts.eval_skipped(meta, lo, hi)) == 1.0 - c
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 300), size=st.integers(1, 50),
+       seed=st.integers(0, 99))
+def test_samplers_bounded(n, size, seed):
+    sw = SlidingWindow(size)
+    rs = ReservoirSample(size, seed=seed)
+    tb = RTBSample(size, seed=seed)
+    for i in range(n):
+        sw.add(i)
+        rs.add(i)
+        tb.add(i)
+    assert len(sw) <= size and len(rs) <= size and len(tb) <= size
+    if n >= size:
+        assert len(sw) == size
+        # sliding window holds exactly the most recent items
+        assert sw.sample() == list(range(n - size, n))
+    # reservoir items are valid observations
+    assert all(0 <= x < n for x in rs.sample())
+    assert all(0 <= x < n for x in tb.sample())
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 30))
+def test_rtbs_recency_bias(seed):
+    """Time-biased reservoir holds more recent items than a uniform one."""
+    tb = RTBSample(50, lam=5e-2, seed=seed)
+    rs = ReservoirSample(50, seed=seed)
+    for i in range(3000):
+        tb.add(i)
+        rs.add(i)
+    assert np.mean(tb.sample()) > np.mean(rs.sample())
+
+
+def test_harmonic_bound_monotone():
+    vals = [theorem_iv1_bound(n) for n in range(1, 30)]
+    assert all(b2 >= b1 for b1, b2 in zip(vals, vals[1:]))

@@ -1,0 +1,225 @@
+"""End-to-end behaviour tests for the OREO system (paper core)."""
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, DynamicUMTS, OreoConfig, OreoRunner,
+                        baselines, build_default_layout, build_qdtree_layout,
+                        build_zorder_layout, generate_workload, layouts,
+                        make_generator, make_templates, stack_queries,
+                        theorem_iv1_bound)
+from repro.core.layout_manager import LayoutManager, LayoutManagerConfig
+
+
+@pytest.fixture(scope="module")
+def bench():
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0, 100, size=(30_000, 10))
+    templates = make_templates(4, 10, rng)
+    stream = generate_workload(templates, data.min(0), data.max(0),
+                               total_queries=2500, seed=1,
+                               segment_length=(500, 800))
+    return data, stream
+
+
+# ---------------------------------------------------------------------------
+# Layout generation + cost model
+# ---------------------------------------------------------------------------
+
+def test_qdtree_beats_default_on_its_workload(bench):
+    data, stream = bench
+    qs = stream.queries[:200]
+    lay = build_qdtree_layout(1, data, qs, 32)
+    lay.materialize(data)
+    default = build_default_layout(0, data, 32)
+    q_lo, q_hi = stack_queries(qs)
+    c_tree = layouts.eval_cost(lay.true_meta, q_lo, q_hi).mean()
+    c_def = layouts.eval_cost(default.meta, q_lo, q_hi).mean()
+    assert c_tree < 0.5 * c_def
+
+
+def test_zorder_layout_partitions_balanced(bench):
+    data, stream = bench
+    lay = build_zorder_layout(1, data, stream.queries[:100], 32)
+    meta = lay.materialize(data)
+    assert meta.num_partitions == 32
+    assert meta.rows.sum() == len(data)
+    assert meta.rows.max() < 4 * meta.rows.mean()
+
+
+def test_estimated_metadata_close_to_true(bench):
+    """Sample-estimated cost vectors approximate materialized ones."""
+    data, stream = bench
+    qs = stream.queries[:150]
+    lay = build_qdtree_layout(2, data, qs, 32)
+    true_meta = lay.materialize(data)
+    q_lo, q_hi = stack_queries(qs)
+    est = layouts.eval_cost(lay.meta, q_lo, q_hi)
+    true = layouts.eval_cost(true_meta, q_lo, q_hi)
+    assert np.abs(est - true).mean() < 0.12
+
+
+def test_cost_in_unit_interval(bench):
+    data, stream = bench
+    lay = build_default_layout(0, data, 16)
+    q_lo, q_hi = stack_queries(stream.queries[:500])
+    c = layouts.eval_cost(lay.meta, q_lo, q_hi)
+    assert np.all(c >= 0) and np.all(c <= 1)
+
+
+# ---------------------------------------------------------------------------
+# D-UMTS decision maker
+# ---------------------------------------------------------------------------
+
+def test_dumts_counters_and_phases():
+    d = DynamicUMTS(alpha=5.0, initial_states=[0, 1, 2], seed=0)
+    for _ in range(100):
+        d.observe({0: 0.5, 1: 0.5, 2: 0.5})
+        assert all(v >= 0 for v in d.counters.values())
+        assert d.current_state in d.states
+    assert d.phase >= 1                      # phases do reset
+
+
+def test_dumts_add_remove_states():
+    d = DynamicUMTS(alpha=5.0, initial_states=[0], seed=0,
+                    midphase_admission="defer")
+    d.add_state(1)
+    assert 1 in d.pending_additions and 1 not in d.states
+    for _ in range(15):                      # exhaust state 0 -> new phase
+        d.observe({0: 0.9, 1: 0.1})
+    assert 1 in d.states                     # admitted at phase reset
+    d.remove_state(0)
+    assert d.current_state == 1
+    with pytest.raises(ValueError):
+        d.remove_state(1)                    # cannot remove last state
+
+
+def test_dumts_median_admission_mid_phase():
+    d = DynamicUMTS(alpha=10.0, initial_states=[0, 1], seed=0,
+                    midphase_admission="median")
+    for _ in range(5):
+        d.observe({0: 0.5, 1: 0.7})
+    d.add_state(2)
+    assert 2 in d.states and 2 in d.active
+    assert d.counters[2] == pytest.approx(
+        np.median([d.counters[0], d.counters[1]]))
+
+
+def test_dumts_stays_in_good_state():
+    """A zero-cost state should never be abandoned within a phase."""
+    d = DynamicUMTS(alpha=5.0, initial_states=[0, 1], seed=0)
+    d.current_state = 0
+    for _ in range(200):
+        d.observe({0: 0.0, 1: 1.0})
+    assert d.current_state == 0
+    assert d.num_moves == 0
+
+
+def test_competitive_bound_formula():
+    assert theorem_iv1_bound(1) == pytest.approx(2.0)
+    assert theorem_iv1_bound(4) == pytest.approx(2 * (1 + 0.5 + 1 / 3 + 0.25))
+
+
+def test_dumts_empirical_competitive_ratio():
+    """Cost(OREO MTS) <= 2H(n) * OPT + O(alpha) on adversarial-ish streams."""
+    rng = np.random.default_rng(0)
+    n, alpha, T = 4, 10.0, 2000
+    costs_per_state = rng.uniform(0, 1, size=(T, n))
+    # make one state cheap per epoch, rotating -> forces movement
+    for t in range(T):
+        costs_per_state[t, (t // 250) % n] *= 0.05
+    d = DynamicUMTS(alpha=alpha, initial_states=list(range(n)), seed=1)
+    online = 0.0
+    for t in range(T):
+        moves_before = d.num_moves
+        s = d.observe({i: float(costs_per_state[t, i]) for i in range(n)})
+        online += costs_per_state[t, s] + (d.num_moves - moves_before) * alpha
+    # offline lower bound: best single state (no movement)
+    opt = costs_per_state.sum(axis=0).min()
+    bound = theorem_iv1_bound(n)
+    assert online <= bound * opt + 4 * alpha, (online, opt, bound)
+
+
+# ---------------------------------------------------------------------------
+# Layout manager (Alg. 5)
+# ---------------------------------------------------------------------------
+
+def test_layout_manager_admission_and_cap(bench):
+    data, stream = bench
+    init = build_default_layout(0, data, 32)
+    cfg = LayoutManagerConfig(target_partitions=32, max_states=4,
+                              epsilon=0.05)
+    mgr = LayoutManager(data, make_generator("qdtree"), init, cfg, seed=0)
+    for q in stream.queries[:1500]:
+        mgr.on_query(q, current_state=0)
+    assert len(mgr.store) <= cfg.max_states
+    assert mgr.num_generated > 0
+    assert mgr.num_admitted <= mgr.num_generated
+
+
+def test_layout_manager_epsilon_monotone(bench):
+    """Higher epsilon admits fewer candidates."""
+    data, stream = bench
+    admitted = {}
+    for eps in (0.02, 0.3):
+        init = build_default_layout(0, data, 32)
+        mgr = LayoutManager(data, make_generator("qdtree"), init,
+                            LayoutManagerConfig(target_partitions=32,
+                                                epsilon=eps), seed=0)
+        for q in stream.queries[:1200]:
+            mgr.on_query(q, current_state=0)
+        admitted[eps] = mgr.num_admitted
+    assert admitted[0.3] <= admitted[0.02]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end online runs
+# ---------------------------------------------------------------------------
+
+def test_oreo_end_to_end_beats_default(bench):
+    data, stream = bench
+    gen = make_generator("qdtree")
+    init = build_default_layout(0, data, 32)
+    res = OreoRunner(data, init, gen, OreoConfig(
+        alpha=80.0, manager=LayoutManagerConfig(target_partitions=32))
+    ).run(stream)
+    # staying in the default layout forever costs ~= len(stream) * default
+    q_lo, q_hi = stack_queries(stream.queries)
+    stay = layouts.eval_cost(init.meta, q_lo, q_hi).sum()
+    assert res.total_cost < stay
+    assert res.total_query_cost + res.total_reorg_cost == pytest.approx(
+        res.total_cost)
+    assert res.num_reorgs == len(res.reorg_indices)
+
+
+def test_oreo_vs_baseline_ordering(bench):
+    """Greedy has lowest query cost / highest reorg; Regret fewest moves."""
+    data, stream = bench
+    gen = make_generator("qdtree")
+    greedy = baselines.run_greedy(data, stream, gen,
+                                  build_default_layout(0, data, 32), 80.0)
+    regret = baselines.run_regret(data, stream, gen,
+                                  build_default_layout(0, data, 32), 80.0)
+    assert greedy.num_reorgs >= regret.num_reorgs
+    assert greedy.total_query_cost <= regret.total_query_cost * 1.5
+
+
+def test_offline_optimal_is_lower_bound(bench):
+    data, stream = bench
+    gen = make_generator("qdtree")
+    off = baselines.run_offline_optimal(data, stream, gen, 80.0)
+    oreo = OreoRunner(data, build_default_layout(0, data, 32), gen,
+                      OreoConfig(alpha=80.0)).run(stream)
+    assert off.total_query_cost <= oreo.total_query_cost
+    assert off.num_reorgs == stream.num_switches
+
+
+def test_delta_delay_increases_query_cost(bench):
+    data, stream = bench
+    gen = make_generator("qdtree")
+    r0 = OreoRunner(data, build_default_layout(0, data, 32), gen,
+                    OreoConfig(alpha=80.0, delta=0, seed=3)).run(stream)
+    r80 = OreoRunner(data, build_default_layout(0, data, 32), gen,
+                     OreoConfig(alpha=80.0, delta=80, seed=3)).run(stream)
+    # same decisions -> same reorg cost; delayed swap -> >= query cost
+    assert r80.total_reorg_cost == r0.total_reorg_cost
+    assert r80.total_query_cost >= r0.total_query_cost * 0.98
