@@ -1,0 +1,16 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench quickstart install
+
+install:
+	pip install -r requirements.txt
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	$(PYTHON) benchmarks/run.py --quick
+
+quickstart:
+	$(PYTHON) examples/quickstart.py

@@ -7,12 +7,15 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import (OreoConfig, OreoRunner, baselines, build_default_layout,
-                        generate_workload, make_generator, make_templates)
+from repro.core import (OreoConfig, build_default_layout, generate_workload,
+                        make_generator, make_templates)
 from repro.core.layout_manager import LayoutManagerConfig
 from repro.core.oreo import RunResult
 from repro.core.workload import WorkloadStream
 from repro.data.datasets import DATASETS, telemetry_templates
+from repro.engine import (GreedyPolicy, InMemoryBackend, LayoutEngine,
+                          MTSOptimalPolicy, OfflineOptimalPolicy, OreoPolicy,
+                          RegretPolicy, StaticPolicy)
 
 # Benchmark scale: the paper runs 30k queries over ~20 segments on 58-column
 # denormalized tables; we default to 12k queries over 12 segments (same
@@ -78,31 +81,36 @@ def run_methods(data: np.ndarray, stream: WorkloadStream, technique: str,
                               candidate_source=candidate_source)
     for method in methods:
         t0 = time.time()
+        engine_delta = 0
         if method == "Static":
-            res = baselines.run_static(data, stream, gen, alpha,
-                                       target_partitions=PARTITIONS)
+            policy = StaticPolicy(data, stream, gen, alpha,
+                                  target_partitions=PARTITIONS)
         elif method == "Greedy":
-            res = baselines.run_greedy(
-                data, stream, gen, build_default_layout(0, data, PARTITIONS),
-                alpha, mgr_cfg=mgr)
+            policy = GreedyPolicy(data,
+                                  build_default_layout(0, data, PARTITIONS),
+                                  gen, alpha, mgr_cfg=mgr)
         elif method == "Regret":
-            res = baselines.run_regret(
-                data, stream, gen, build_default_layout(0, data, PARTITIONS),
-                alpha, mgr_cfg=mgr)
+            policy = RegretPolicy(data,
+                                  build_default_layout(0, data, PARTITIONS),
+                                  gen, alpha, mgr_cfg=mgr)
         elif method == "OREO":
             cfg = OreoConfig(alpha=alpha, gamma=gamma, delta=delta, seed=seed,
                              manager=mgr)
-            res = OreoRunner(data, build_default_layout(0, data, PARTITIONS),
-                             gen, cfg).run(stream)
+            policy = OreoPolicy(data,
+                                build_default_layout(0, data, PARTITIONS),
+                                gen, cfg)
+            engine_delta = delta
         elif method == "MTS Optimal":
-            res = baselines.run_mts_optimal(data, stream, gen, alpha,
-                                            target_partitions=PARTITIONS,
-                                            gamma=gamma, seed=seed)
+            policy = MTSOptimalPolicy(data, stream, gen, alpha,
+                                      target_partitions=PARTITIONS,
+                                      gamma=gamma, seed=seed)
         elif method == "Offline Optimal":
-            res = baselines.run_offline_optimal(data, stream, gen, alpha,
-                                                target_partitions=PARTITIONS)
+            policy = OfflineOptimalPolicy(data, stream, gen, alpha,
+                                          target_partitions=PARTITIONS)
         else:
             raise ValueError(method)
+        res = LayoutEngine(policy, InMemoryBackend(data),
+                           delta=engine_delta).run(stream, name=method)
         res.info["wall_seconds"] = time.time() - t0
         out[method] = res
     return out

@@ -8,8 +8,9 @@ from __future__ import annotations
 from typing import List
 
 from benchmarks import common
-from repro.core import OreoConfig, OreoRunner, build_default_layout, make_generator
+from repro.core import OreoConfig, build_default_layout, make_generator
 from repro.core.layout_manager import LayoutManagerConfig
+from repro.engine import InMemoryBackend, LayoutEngine, OreoPolicy
 
 EPSILONS = (0.02, 0.05, 0.08, 0.15, 0.30)
 
@@ -24,9 +25,10 @@ def run(quick: bool = False) -> List[str]:
                          manager=LayoutManagerConfig(
                              target_partitions=common.PARTITIONS,
                              epsilon=eps))
-        runner = OreoRunner(data, build_default_layout(
+        policy = OreoPolicy(data, build_default_layout(
             0, data, common.PARTITIONS), gen, cfg)
-        res = runner.run(stream)
+        res = LayoutEngine(policy, InMemoryBackend(data),
+                           delta=cfg.delta).run(stream)
         rows.append(common.csv_row(
             f"fig6.epsilon_{eps}", 0.0,
             f"total={res.total_cost:.1f};query={res.total_query_cost:.1f};"

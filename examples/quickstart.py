@@ -8,10 +8,11 @@ optimized layout and the greedy/regret baselines.
 """
 import numpy as np
 
-from repro.core import (OreoConfig, OreoRunner, baselines,
-                        build_default_layout, generate_workload,
+from repro.core import (OreoConfig, build_default_layout, generate_workload,
                         make_generator, make_templates)
 from repro.core.layout_manager import LayoutManagerConfig
+from repro.engine import (GreedyPolicy, InMemoryBackend, LayoutEngine,
+                          OreoPolicy, RegretPolicy, StaticPolicy)
 
 
 def main() -> None:
@@ -30,16 +31,20 @@ def main() -> None:
     gen = make_generator("qdtree")          # or "zorder"
     alpha = 80.0                            # reorg = 80x a full scan
 
-    oreo = OreoRunner(
+    # Every method is a Policy plugged into the same stepwise LayoutEngine
+    # loop; swap InMemoryBackend for DiskBackend to run against real files.
+    def run(policy):
+        return LayoutEngine(policy, InMemoryBackend(data)).run(stream)
+
+    oreo = run(OreoPolicy(
         data, build_default_layout(0, data, 32), gen,
         OreoConfig(alpha=alpha, gamma=1.0,
-                   manager=LayoutManagerConfig(target_partitions=32)),
-    ).run(stream)
-    static = baselines.run_static(data, stream, gen, alpha)
-    greedy = baselines.run_greedy(data, stream, gen,
-                                  build_default_layout(0, data, 32), alpha)
-    regret = baselines.run_regret(data, stream, gen,
-                                  build_default_layout(0, data, 32), alpha)
+                   manager=LayoutManagerConfig(target_partitions=32))))
+    static = run(StaticPolicy(data, stream, gen, alpha))
+    greedy = run(GreedyPolicy(data, build_default_layout(0, data, 32), gen,
+                              alpha))
+    regret = run(RegretPolicy(data, build_default_layout(0, data, 32), gen,
+                              alpha))
 
     print("total cost = query cost + alpha * reorganizations\n")
     for r in (static, greedy, regret, oreo):

@@ -5,17 +5,21 @@ Public API of the paper's contribution:
 * :class:`~repro.core.mts.DynamicUMTS` -- D-UMTS decision maker (Alg. 1-4).
 * :class:`~repro.core.layout_manager.LayoutManager` -- candidate generation +
   ε-admission (Alg. 5).
-* :class:`~repro.core.oreo.OreoRunner` -- the full online loop (Fig. 1).
+* :class:`~repro.engine.LayoutEngine` -- the stepwise online loop (Fig. 1),
+  in :mod:`repro.engine` with pluggable policies and storage backends
+  (:class:`~repro.core.oreo.OreoRunner` remains as a deprecated alias).
 * Layout generators: Qd-tree, Z-order, default (arrival-order).
-* Baselines: Static / Greedy / Regret / MTS-Optimal / Offline-Optimal.
+* Baselines: Static / Greedy / Regret / MTS-Optimal / Offline-Optimal, each
+  a Policy over the shared engine loop.
 """
 from repro.core import baselines, cost_model, layout_manager, layouts
 from repro.core import mts, oreo, predictors, qdtree, sampling, workload, zorder
 from repro.core.cost_model import CostModel
 from repro.core.layout_manager import LayoutManager, LayoutManagerConfig, make_generator
 from repro.core.layouts import (Layout, PartitionMetadata, cost_vector,
-                                eval_cost, eval_skipped, layout_distance,
-                                metadata_from_assignment, partitions_scanned)
+                                eval_cost, eval_cost_states, eval_skipped,
+                                layout_distance, metadata_from_assignment,
+                                partitions_scanned)
 from repro.core.mts import DynamicUMTS, theorem_iv1_bound, theorem_iv2_bound
 from repro.core.oreo import OreoConfig, OreoRunner, RunResult
 from repro.core.qdtree import build_default_layout, build_qdtree_layout
@@ -29,7 +33,8 @@ __all__ = [
     "LayoutManagerConfig", "OreoConfig", "OreoRunner", "PartitionMetadata",
     "Query", "QueryTemplate", "RunResult", "WorkloadStream",
     "build_default_layout", "build_qdtree_layout", "build_zorder_layout",
-    "cost_vector", "eval_cost", "eval_skipped", "generate_workload",
+    "cost_vector", "eval_cost", "eval_cost_states", "eval_skipped",
+    "generate_workload",
     "layout_distance", "make_generator", "make_templates",
     "metadata_from_assignment", "partitions_scanned", "stack_queries",
     "theorem_iv1_bound", "theorem_iv2_bound",

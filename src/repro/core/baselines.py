@@ -12,6 +12,10 @@ Offline (workload knowledge):
     OREO's D-UMTS switching.
   * Offline-Optimal -- sees the whole stream; switches to each template's best
     layout exactly at template boundaries (lower bound for online methods).
+
+Every method runs through the shared :class:`repro.engine.LayoutEngine` loop
+as a pluggable policy (:mod:`repro.engine.policies`); the ``run_*`` functions
+below are thin compatibility wrappers composing policy + in-memory backend.
 """
 from __future__ import annotations
 
@@ -19,9 +23,15 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from . import cost_model as cm
 from . import layout_manager as lm
-from . import layouts, mts, oreo, predictors, sampling, workload as wl
+from . import layouts, oreo, workload as wl
+
+
+def _run(policy, data: np.ndarray, stream: wl.WorkloadStream,
+         name: str) -> oreo.RunResult:
+    from repro import engine as _engine   # deferred: engine builds on core
+    return _engine.LayoutEngine(policy, _engine.InMemoryBackend(data)).run(
+        stream, name=name)
 
 
 # ---------------------------------------------------------------------------
@@ -32,13 +42,10 @@ def run_static(data: np.ndarray, stream: wl.WorkloadStream,
                generator: lm.GeneratorFn, alpha: float,
                target_partitions: int = 32,
                name: str = "Static") -> oreo.RunResult:
-    layout = generator(0, data, stream.queries, target_partitions)
-    meta = layout.materialize(data)
-    q_lo, q_hi = wl.stack_queries(stream.queries)
-    costs = layouts.eval_cost(meta, q_lo, q_hi)
-    return oreo.RunResult(name=name, alpha=alpha, query_costs=costs,
-                          reorg_indices=[], state_seq=np.zeros(len(stream),
-                                                               dtype=np.int64))
+    from repro import engine as _engine
+    policy = _engine.StaticPolicy(data, stream, generator, alpha,
+                                  target_partitions=target_partitions)
+    return _run(policy, data, stream, name)
 
 
 # ---------------------------------------------------------------------------
@@ -49,33 +56,10 @@ def run_greedy(data: np.ndarray, stream: wl.WorkloadStream,
                generator: lm.GeneratorFn, initial_layout: layouts.Layout,
                alpha: float, mgr_cfg: Optional[lm.LayoutManagerConfig] = None,
                name: str = "Greedy") -> oreo.RunResult:
-    cfg = mgr_cfg or lm.LayoutManagerConfig()
-    window: sampling.SlidingWindow[wl.Query] = sampling.SlidingWindow(
-        cfg.window_size)
-    current = initial_layout
-    current.materialize(data)
-    next_id = initial_layout.layout_id + 1
-    query_costs, reorg_indices, state_seq = [], [], []
-    for i, q in enumerate(stream):
-        window.add(q)
-        if (i + 1) % cfg.gen_every == 0 and len(window) >= cfg.window_size // 2:
-            qs = window.sample()
-            cand = generator(next_id, data, qs, cfg.target_partitions)
-            next_id += 1
-            w_lo, w_hi = wl.stack_queries(qs)
-            cur_cost = layouts.eval_cost(current.meta, w_lo, w_hi).mean()
-            cand_cost = layouts.eval_cost(cand.meta, w_lo, w_hi).mean()
-            if cand_cost < cur_cost:
-                current = cand
-                current.materialize(data)
-                reorg_indices.append(i)
-        query_costs.append(
-            float(layouts.eval_cost(current.serving_meta(), q.lo, q.hi)))
-        state_seq.append(current.layout_id)
-    return oreo.RunResult(name=name, alpha=alpha,
-                          query_costs=np.asarray(query_costs),
-                          reorg_indices=reorg_indices,
-                          state_seq=np.asarray(state_seq))
+    from repro import engine as _engine
+    policy = _engine.GreedyPolicy(data, initial_layout, generator, alpha,
+                                  mgr_cfg=mgr_cfg)
+    return _run(policy, data, stream, name)
 
 
 def run_regret(data: np.ndarray, stream: wl.WorkloadStream,
@@ -84,45 +68,11 @@ def run_regret(data: np.ndarray, stream: wl.WorkloadStream,
                max_candidates: int = 8,
                name: str = "Regret") -> oreo.RunResult:
     """Switch when cumulative saving vs. the current layout exceeds alpha."""
-    cfg = mgr_cfg or lm.LayoutManagerConfig()
-    model = cm.CostModel(alpha=alpha)
-    window: sampling.SlidingWindow[wl.Query] = sampling.SlidingWindow(
-        cfg.window_size)
-    current = initial_layout
-    current.materialize(data)
-    next_id = initial_layout.layout_id + 1
-    candidates: Dict[int, layouts.Layout] = {}
-    cum_saving: Dict[int, float] = {}
-    query_costs, reorg_indices, state_seq = [], [], []
-    for i, q in enumerate(stream):
-        window.add(q)
-        if (i + 1) % cfg.gen_every == 0 and len(window) >= cfg.window_size // 2:
-            cand = generator(next_id, data, window.sample(),
-                             cfg.target_partitions)
-            candidates[next_id] = cand
-            cum_saving[next_id] = 0.0
-            next_id += 1
-            if len(candidates) > max_candidates:   # bound tracked candidates
-                oldest = min(candidates)
-                del candidates[oldest]
-                del cum_saving[oldest]
-        cur_c = model.query_cost(current, q)        # estimate, for decisions
-        for sid, lay in candidates.items():
-            cum_saving[sid] += cur_c - model.query_cost(lay, q)
-        if cum_saving:
-            best = max(cum_saving, key=cum_saving.get)
-            if cum_saving[best] > alpha:
-                current = candidates.pop(best)
-                current.materialize(data)
-                cum_saving = {sid: 0.0 for sid in candidates}
-                reorg_indices.append(i)
-        query_costs.append(
-            float(layouts.eval_cost(current.serving_meta(), q.lo, q.hi)))
-        state_seq.append(current.layout_id)
-    return oreo.RunResult(name=name, alpha=alpha,
-                          query_costs=np.asarray(query_costs),
-                          reorg_indices=reorg_indices,
-                          state_seq=np.asarray(state_seq))
+    from repro import engine as _engine
+    policy = _engine.RegretPolicy(data, initial_layout, generator, alpha,
+                                  mgr_cfg=mgr_cfg,
+                                  max_candidates=max_candidates)
+    return _run(policy, data, stream, name)
 
 
 # ---------------------------------------------------------------------------
@@ -151,27 +101,11 @@ def run_mts_optimal(data: np.ndarray, stream: wl.WorkloadStream,
                     seed: int = 0,
                     name: str = "MTS Optimal") -> oreo.RunResult:
     """Fixed precomputed state space + our MTS switching (no dynamic states)."""
-    per_template = per_template_layouts(data, stream, generator,
-                                        target_partitions)
-    store = {lay.layout_id: lay for lay in per_template.values()}
-    model = cm.CostModel(alpha=alpha)
-    dumts = mts.DynamicUMTS(
-        alpha=alpha, initial_states=sorted(store), seed=seed,
-        transition_fn=predictors.gamma_biased_transition(gamma))
-    query_costs, reorg_indices, state_seq = [], [], []
-    for i, q in enumerate(stream):
-        costs = {sid: model.query_cost(lay, q) for sid, lay in store.items()}
-        prev = dumts.num_moves
-        state = dumts.observe(costs)
-        if dumts.num_moves > prev:
-            reorg_indices.append(i)
-        query_costs.append(
-            float(layouts.eval_cost(store[state].serving_meta(), q.lo, q.hi)))
-        state_seq.append(state)
-    return oreo.RunResult(name=name, alpha=alpha,
-                          query_costs=np.asarray(query_costs),
-                          reorg_indices=reorg_indices,
-                          state_seq=np.asarray(state_seq))
+    from repro import engine as _engine
+    policy = _engine.MTSOptimalPolicy(data, stream, generator, alpha,
+                                      target_partitions=target_partitions,
+                                      gamma=gamma, seed=seed)
+    return _run(policy, data, stream, name)
 
 
 def run_offline_optimal(data: np.ndarray, stream: wl.WorkloadStream,
@@ -179,23 +113,7 @@ def run_offline_optimal(data: np.ndarray, stream: wl.WorkloadStream,
                         target_partitions: int = 32,
                         name: str = "Offline Optimal") -> oreo.RunResult:
     """Knows the whole stream: per-template layout, switch at boundaries."""
-    per_template = per_template_layouts(data, stream, generator,
-                                        target_partitions)
-    model = cm.CostModel(alpha=alpha)
-    query_costs = np.zeros(len(stream))
-    reorg_indices: List[int] = []
-    state_seq = np.zeros(len(stream), dtype=np.int64)
-    prev_tid = None
-    for start, end, tid in stream.segments:
-        lay = per_template[tid]
-        qs = stream.queries[start:end]
-        if qs:
-            q_lo, q_hi = wl.stack_queries(qs)
-            query_costs[start:end] = layouts.eval_cost(lay.serving_meta(),
-                                                       q_lo, q_hi)
-        state_seq[start:end] = lay.layout_id
-        if prev_tid is not None and tid != prev_tid:
-            reorg_indices.append(start)
-        prev_tid = tid
-    return oreo.RunResult(name=name, alpha=alpha, query_costs=query_costs,
-                          reorg_indices=reorg_indices, state_seq=state_seq)
+    from repro import engine as _engine
+    policy = _engine.OfflineOptimalPolicy(data, stream, generator, alpha,
+                                          target_partitions=target_partitions)
+    return _run(policy, data, stream, name)

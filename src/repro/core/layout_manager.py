@@ -136,8 +136,10 @@ class LayoutManager:
         vector is closest to some other state (most redundant)."""
         removed = []
         while len(self.store) > self.config.max_states:
-            vecs = self._cost_vectors(self.store)
             ids = [i for i in self.store if i != current_state]
+            if not ids:
+                break
+            vecs = self._cost_vectors(self.store)
             best, best_d = None, np.inf
             for i in ids:
                 d = min(layouts.layout_distance(vecs[i], vecs[j])
@@ -145,7 +147,10 @@ class LayoutManager:
                 if d < best_d:
                     best, best_d = i, d
             if best is None:
-                break
+                # Every candidate tied at a non-comparable distance (e.g. an
+                # empty R-TBS sample yields degenerate cost vectors): evict
+                # the newest non-current state so the loop always progresses.
+                best = max(ids)
             del self.store[best]
             removed.append(best)
         return removed

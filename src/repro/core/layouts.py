@@ -9,7 +9,7 @@ metadata-only and never touches row data.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -156,7 +156,45 @@ def cost_vector(meta: PartitionMetadata, q_lo: np.ndarray,
 
 
 def layout_distance(cv_a: np.ndarray, cv_b: np.ndarray) -> float:
-    """Normalized L1 distance between two cost vectors (paper §V-B)."""
-    if len(cv_a) == 0:
-        return 0.0
+    """Normalized L1 distance between two cost vectors (paper §V-B).
+
+    Zero-length vectors (an empty query sample) carry no evidence that two
+    layouts are similar, so the distance is *infinite*: admission treats the
+    pair as distinct-but-unverifiable (callers reject separately) and
+    eviction/pruning never merges states on the basis of an empty sample.
+    """
+    if len(cv_a) == 0 or len(cv_b) == 0:
+        return float("inf")
     return float(np.abs(cv_a - cv_b).mean())
+
+
+def eval_cost_states(metas: Sequence[PartitionMetadata], q_lo: np.ndarray,
+                     q_hi: np.ndarray) -> np.ndarray:
+    """Service cost of a *single* query under many candidate layouts at once.
+
+    The partition-overlap test — the O(S * P * C) bulk of the work — runs as
+    one vectorized comparison over all states (padded to the widest partition
+    count; padding rows use [+inf, -inf] bounds and zero rows so they are
+    never scanned).  The final per-state dot products intentionally reuse each
+    state's exact (P,) arrays so the result is bit-identical to calling
+    :func:`eval_cost` on every state individually — the online decision loop
+    relies on this when comparing the engine against the legacy runner.
+
+    Returns float (S,), one cost in [0, 1] per state.
+    """
+    if not metas:
+        return np.zeros(0)
+    counts = [m.num_partitions for m in metas]
+    p_max = max(counts)
+    s, c = len(metas), metas[0].num_columns
+    mins = np.full((s, p_max, c), np.inf)
+    maxs = np.full((s, p_max, c), -np.inf)
+    for i, m in enumerate(metas):
+        mins[i, :counts[i]] = m.mins
+        maxs[i, :counts[i]] = m.maxs
+    scanned = ((mins <= q_hi) & (maxs >= q_lo)).all(axis=-1)     # (S, P_max)
+    out = np.empty(s)
+    for i, m in enumerate(metas):
+        total = max(m.total_rows, 1)
+        out[i] = (scanned[i, :counts[i]] @ self_rows(m)) / total
+    return out

@@ -1,20 +1,21 @@
-"""OREO orchestrator: REORGANIZER (D-UMTS) x LAYOUT MANAGER over a stream.
+"""OREO run configuration, result traces, and the deprecated batch runner.
 
-Implements the full online loop of Figure 1, including the paper's
-Δ-delay semantics for background reorganization (§VI-D5): the reorganization
-cost is charged as soon as the decision is made, but queries keep running on
-the *old* layout for Δ more queries before the swap takes effect.
+The online loop of Figure 1 — including the paper's Δ-delay semantics for
+background reorganization (§VI-D5) — now lives in :mod:`repro.engine`
+(:class:`~repro.engine.LayoutEngine` + :class:`~repro.engine.OreoPolicy`).
+This module keeps :class:`OreoConfig` and :class:`RunResult`, plus
+:class:`OreoRunner` as a deprecated batch alias over the engine.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import List, Optional
 
 import numpy as np
 
-from . import cost_model as cm
 from . import layout_manager as lm
-from . import layouts, mts, predictors, workload as wl
+from . import layouts, mts, workload as wl
 
 
 @dataclasses.dataclass
@@ -45,10 +46,18 @@ class RunResult:
         return len(self.reorg_indices)
 
     def cumulative(self) -> np.ndarray:
-        cum = np.cumsum(self.query_costs)
-        for i in self.reorg_indices:
-            cum[i:] += self.alpha
-        return cum
+        """Running total (query + reorg) cost after each query.
+
+        Each reorganization charges ``alpha`` exactly once, at its reorg
+        index (duplicate indices accumulate), so ``cumulative()[-1]`` always
+        equals :attr:`total_cost` and repeated calls are stable.
+        """
+        per_query = self.query_costs.astype(np.float64, copy=True)
+        if self.reorg_indices:
+            np.add.at(per_query,
+                      np.asarray(self.reorg_indices, dtype=np.int64),
+                      self.alpha)
+        return np.cumsum(per_query)
 
     def summary(self) -> str:
         return (f"{self.name}: total={self.total_cost:.1f} "
@@ -69,81 +78,43 @@ class OreoConfig:
 
 
 class OreoRunner:
-    """End-to-end online run of OREO on a (data, stream) pair."""
+    """Deprecated batch alias for the stepwise engine (kept one release).
+
+    The online loop now lives in :mod:`repro.engine`; this shim composes
+    ``LayoutEngine(OreoPolicy(...), InMemoryBackend(data))`` and reproduces
+    the legacy per-query cost trace bit-for-bit.  Prefer::
+
+        from repro.engine import InMemoryBackend, LayoutEngine, OreoPolicy
+
+        policy = OreoPolicy(data, initial_layout, generator, config)
+        engine = LayoutEngine(policy, InMemoryBackend(data),
+                              delta=config.delta)
+        result = engine.run(stream)
+    """
 
     def __init__(self, data: np.ndarray, initial_layout: layouts.Layout,
                  generator: lm.GeneratorFn,
                  config: Optional[OreoConfig] = None):
+        warnings.warn(
+            "OreoRunner is deprecated; use repro.engine.LayoutEngine with "
+            "OreoPolicy + a StorageBackend instead.",
+            DeprecationWarning, stacklevel=2)
+        from repro import engine as _engine   # deferred: engine builds on core
         self.config = config or OreoConfig()
         self.data = data
-        self.manager = lm.LayoutManager(data, generator, initial_layout,
-                                        self.config.manager,
-                                        seed=self.config.seed)
-        self.dumts = mts.DynamicUMTS(
-            alpha=self.config.alpha,
-            initial_states=[initial_layout.layout_id],
-            seed=self.config.seed,
-            transition_fn=predictors.gamma_biased_transition(self.config.gamma),
-            stay_on_phase_start=self.config.stay_on_phase_start,
-        )
-        self.cost_model = cm.CostModel(alpha=self.config.alpha)
+        self.policy = _engine.OreoPolicy(data, initial_layout, generator,
+                                         self.config)
+        self.backend = _engine.InMemoryBackend(data)
+        self.engine = _engine.LayoutEngine(self.policy, self.backend,
+                                           delta=self.config.delta)
+
+    @property
+    def manager(self) -> lm.LayoutManager:
+        return self.policy.manager
+
+    @property
+    def dumts(self) -> mts.DynamicUMTS:
+        return self.policy.dumts
 
     def run(self, stream: wl.WorkloadStream, name: str = "OREO") -> RunResult:
-        delta = self.config.delta
-        query_costs: List[float] = []
-        reorg_indices: List[int] = []
-        state_seq: List[int] = []
-        # The physically materialized layout serving queries.  Decisions use
-        # sample-estimated metadata; *charged* query costs use the exact
-        # metadata of the materialized table.
-        physical = self.manager.store[self.dumts.current_state]
-        physical.materialize(self.data)
-        pending_swaps: List[tuple[int, int]] = []       # (effective_idx, state)
-
-        for i, q in enumerate(stream):
-            added, removed = self.manager.on_query(q, self.dumts.current_state)
-            for sid in added:
-                self.dumts.add_state(sid)
-            for sid in removed:
-                self.dumts.remove_state(sid)
-
-            # Service-cost estimates for all states known to the decision
-            # maker -- metadata-only (never touches rows).
-            costs: Dict[int, float] = {}
-            for sid in set(self.dumts.states) | set(self.dumts.pending_additions):
-                if sid in self.manager.store:
-                    costs[sid] = self.cost_model.query_cost(
-                        self.manager.store[sid], q)
-                else:
-                    costs[sid] = 1.0
-            prev_moves = self.dumts.num_moves
-            decision_state = self.dumts.observe(costs)
-            if self.dumts.num_moves > prev_moves:
-                # Reorg cost charged at decision time (paper §VI-D5).
-                reorg_indices.append(i)
-                pending_swaps.append((i + delta, decision_state))
-
-            # Apply any swap whose background reorganization has finished.
-            while pending_swaps and pending_swaps[0][0] <= i:
-                _, sid = pending_swaps.pop(0)
-                if sid in self.manager.store:
-                    physical = self.manager.store[sid]
-                    physical.materialize(self.data)
-            qc = float(layouts.eval_cost(physical.serving_meta(), q.lo, q.hi))
-            query_costs.append(qc)
-            state_seq.append(decision_state)
-
-        return RunResult(
-            name=name,
-            alpha=self.config.alpha,
-            query_costs=np.asarray(query_costs),
-            reorg_indices=reorg_indices,
-            state_seq=np.asarray(state_seq),
-            info={
-                "phases": self.dumts.phase,
-                "max_state_space": self.dumts.max_state_space,
-                "competitive_bound": self.dumts.competitive_bound(),
-                "candidates_generated": self.manager.num_generated,
-                "candidates_admitted": self.manager.num_admitted,
-            },
-        )
+        return self.engine.run(stream, name=name)

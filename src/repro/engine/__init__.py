@@ -1,0 +1,34 @@
+"""Online layout-optimization engine: stepwise loop, policies, backends.
+
+The public API for running OREO (and every method of comparison) as an
+online *service* rather than a batch simulation::
+
+    from repro.engine import LayoutEngine, InMemoryBackend, OreoPolicy
+
+    policy = OreoPolicy(data, initial_layout, generator, OreoConfig(alpha=80))
+    engine = LayoutEngine(policy, InMemoryBackend(data), delta=policy.config.delta)
+    for query in live_traffic:
+        step = engine.step(query)          # serve + decide + maybe reorg
+    trace = engine.result()                # RunResult, same as the old runner
+
+Layers:
+
+* :class:`LayoutEngine` — the shared loop (Δ-delayed swaps, cost trace).
+* :class:`Policy` — decision layer: :class:`OreoPolicy`,
+  :class:`GreedyPolicy`, :class:`RegretPolicy`, :class:`StaticPolicy`,
+  :class:`MTSOptimalPolicy`, :class:`OfflineOptimalPolicy`.
+* :class:`StorageBackend` — physical layer: :class:`InMemoryBackend`
+  (vectorized numpy simulation) and :class:`DiskBackend` (versioned
+  partition files with background materialization).
+"""
+from repro.engine.backends import DiskBackend, InMemoryBackend, StorageBackend
+from repro.engine.core import LayoutEngine, StepResult
+from repro.engine.policies import (Decision, GreedyPolicy, MTSOptimalPolicy,
+                                   OfflineOptimalPolicy, OreoPolicy, Policy,
+                                   RegretPolicy, StaticPolicy)
+
+__all__ = [
+    "Decision", "DiskBackend", "GreedyPolicy", "InMemoryBackend",
+    "LayoutEngine", "MTSOptimalPolicy", "OfflineOptimalPolicy", "OreoPolicy",
+    "Policy", "RegretPolicy", "StaticPolicy", "StepResult", "StorageBackend",
+]

@@ -1,0 +1,248 @@
+"""Storage backends: the physical layer behind the :class:`LayoutEngine`.
+
+A backend owns the *physical* side of the online loop — which layouts are
+registered, which one is currently materialized and serving queries, and what
+a query actually costs against the materialized table.  The decision layer
+(policies + D-UMTS) only ever sees metadata-level cost estimates, mirroring
+the paper's design where candidate exploration never touches row data.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core import layouts as L
+from repro.core import workload as wl
+from repro.data.partition_store import PartitionStore
+
+
+@runtime_checkable
+class StorageBackend(Protocol):
+    """Physical layer contract consumed by :class:`repro.engine.LayoutEngine`.
+
+    Lifecycle of a state id under this protocol:
+
+    1. :meth:`register` — a policy admits a candidate layout; the backend
+       tracks it but does **not** materialize anything (registration is
+       metadata-only and therefore cheap).
+    2. :meth:`estimate_costs` — per-query, the engine asks for service-cost
+       estimates of many registered states in one batched call.  Estimates
+       use each layout's *estimated* metadata (``Layout.meta``), never disk.
+    3. :meth:`prepare` — the engine announces a reorganization decision.  A
+       backend may start background materialization here so the Δ-delay
+       between decision and swap overlaps with useful work.
+    4. :meth:`activate` — the swap takes effect: the state becomes the
+       serving layout (materializing it now if :meth:`prepare` did not).
+    5. :meth:`serve` — charge one query against the *currently serving*
+       materialized layout, returning the fraction of records accessed.
+    6. :meth:`deregister` — the policy evicted the state.  Must be a no-op
+       for unknown ids; must not disturb the serving layout even if the
+       serving state itself is deregistered (the physical table survives
+       until the next swap, exactly like the legacy runner).
+    """
+
+    def register(self, layout: L.Layout) -> None: ...
+
+    def deregister(self, state_id: int) -> None: ...
+
+    def has(self, state_id: int) -> bool: ...
+
+    def get(self, state_id: int) -> L.Layout: ...
+
+    def estimate_costs(self, state_ids: Sequence[int],
+                       query: wl.Query) -> Dict[int, float]: ...
+
+    def prepare(self, state_id: int) -> None: ...
+
+    def activate(self, state_id: int) -> None: ...
+
+    @property
+    def serving_state(self) -> Optional[int]: ...
+
+    def serve(self, query: wl.Query) -> float: ...
+
+
+class _RegistryMixin:
+    """Shared metadata-only registry + batched estimation."""
+
+    _layouts: Dict[int, L.Layout]
+
+    def register(self, layout: L.Layout) -> None:
+        self._layouts[layout.layout_id] = layout
+
+    def deregister(self, state_id: int) -> None:
+        self._layouts.pop(state_id, None)
+
+    def has(self, state_id: int) -> bool:
+        return state_id in self._layouts
+
+    def get(self, state_id: int) -> L.Layout:
+        return self._layouts[state_id]
+
+    @property
+    def states(self) -> List[int]:
+        return sorted(self._layouts)
+
+    def estimate_costs(self, state_ids: Sequence[int],
+                       query: wl.Query) -> Dict[int, float]:
+        """Batched metadata-only c(s, q) for every requested state.
+
+        One vectorized :func:`repro.core.layouts.eval_cost_states` call over
+        all states (bit-identical to evaluating each state individually).
+        """
+        ids = list(state_ids)
+        metas = [self._layouts[s].meta for s in ids]
+        costs = L.eval_cost_states(metas, query.lo, query.hi)
+        return {s: float(c) for s, c in zip(ids, costs)}
+
+
+class InMemoryBackend(_RegistryMixin):
+    """Numpy-table backend: the simulation / benchmarking physical layer.
+
+    Materialization computes exact zone maps over the in-memory table;
+    serving charges the metadata-derived fraction of records accessed.
+    """
+
+    def __init__(self, data: np.ndarray):
+        self.data = data
+        self._layouts: Dict[int, L.Layout] = {}
+        self._serving: Optional[L.Layout] = None
+
+    def prepare(self, state_id: int) -> None:
+        # In-memory reorganization is instantaneous; nothing to overlap.
+        pass
+
+    def activate(self, state_id: int) -> None:
+        layout = self._layouts[state_id]
+        layout.materialize(self.data)
+        self._serving = layout
+
+    @property
+    def serving_state(self) -> Optional[int]:
+        return None if self._serving is None else self._serving.layout_id
+
+    def serve(self, query: wl.Query) -> float:
+        return float(L.eval_cost(self._serving.serving_meta(),
+                                 query.lo, query.hi))
+
+
+class DiskBackend(_RegistryMixin):
+    """On-disk backend over :class:`repro.data.partition_store.PartitionStore`.
+
+    Every materialized layout lives in its own versioned directory under
+    ``root``; :meth:`prepare` rewrites the table into a *fresh* directory on
+    a background thread while queries keep scanning the old one, and
+    :meth:`activate` flips the serving pointer (joining the writer first if
+    the Δ-delay elapsed before the rewrite finished).  This gives the
+    paper's §VI-D5 semantics for real files: reorganization cost is incurred
+    at decision time, the swap is deferred, and serving is never interrupted.
+    """
+
+    def __init__(self, data: np.ndarray, root: str, compress: bool = True,
+                 background: bool = True):
+        self.data = data
+        self.root = root
+        self.compress = compress
+        self.background = background
+        os.makedirs(root, exist_ok=True)
+        self._layouts: Dict[int, L.Layout] = {}
+        self._serving_layout: Optional[L.Layout] = None
+        self._serving_store: Optional[PartitionStore] = None
+        self._version = 0
+        self._lock = threading.Lock()
+        self._pending: Dict[int, Tuple[Optional[threading.Thread],
+                                       PartitionStore, dict]] = {}
+        self.initial_write_seconds = 0.0
+        self.reorg_seconds: List[float] = []
+
+    # ------------------------------------------------------------------
+    def _new_store(self) -> PartitionStore:
+        self._version += 1
+        return PartitionStore(os.path.join(self.root,
+                                           f"v{self._version:05d}"))
+
+    def deregister(self, state_id: int) -> None:
+        super().deregister(state_id)
+        pending = self._pending.pop(state_id, None)
+        if pending is None:
+            return
+        thread, store, entry = pending
+        # Never block serving on an in-flight rewrite whose output is being
+        # discarded: flag it cancelled and let the writer thread delete its
+        # own directory; only clean up here if the write already finished.
+        with self._lock:
+            entry["cancelled"] = True
+            finished = entry["done"] or thread is None
+        if finished:
+            shutil.rmtree(store.root, ignore_errors=True)
+
+    def prepare(self, state_id: int) -> None:
+        if state_id in self._pending or state_id not in self._layouts:
+            return
+        layout = self._layouts[state_id]
+        store = self._new_store()
+        entry = {"done": False, "cancelled": False}
+
+        def work() -> None:
+            secs = store.write(self.data, layout, compress=self.compress)
+            with self._lock:
+                entry["done"] = True
+                cancelled = entry["cancelled"]
+            if cancelled:
+                shutil.rmtree(store.root, ignore_errors=True)
+            else:
+                self.reorg_seconds.append(secs)
+
+        if self.background:
+            thread = threading.Thread(target=work, daemon=True)
+            thread.start()
+        else:
+            work()
+            thread = None
+        self._pending[state_id] = (thread, store, entry)
+
+    def activate(self, state_id: int) -> None:
+        layout = self._layouts[state_id]
+        pending = self._pending.pop(state_id, None)
+        if pending is None:
+            store = self._new_store()
+            secs = store.write(self.data, layout, compress=self.compress)
+            if self._serving_store is None:
+                # First materialization: the initial table load, not a reorg.
+                self.initial_write_seconds += secs
+            else:
+                self.reorg_seconds.append(secs)
+        else:
+            thread, store, _ = pending
+            if thread is not None:
+                thread.join()
+        old = self._serving_store
+        self._serving_store, self._serving_layout = store, layout
+        if old is not None:
+            shutil.rmtree(old.root, ignore_errors=True)
+
+    @property
+    def serving_state(self) -> Optional[int]:
+        return (None if self._serving_layout is None
+                else self._serving_layout.layout_id)
+
+    def serve(self, query: wl.Query) -> float:
+        _, stats = self._serving_store.scan(query)
+        return stats.rows_read / max(len(self.data), 1)
+
+    def close(self) -> None:
+        """Join background writers and remove all materialized directories."""
+        for state_id in list(self._pending):
+            thread, store, entry = self._pending.pop(state_id)
+            with self._lock:
+                entry["cancelled"] = True
+            if thread is not None:
+                thread.join()
+            shutil.rmtree(store.root, ignore_errors=True)
+        if self._serving_store is not None:
+            shutil.rmtree(self._serving_store.root, ignore_errors=True)
+            self._serving_store = self._serving_layout = None

@@ -1,0 +1,128 @@
+"""The stepwise online loop: one engine, pluggable policies and backends.
+
+``LayoutEngine.step(query)`` interleaves the three concerns of Figure 1 for a
+single query — decision (policy), physical reorganization (backend, with the
+paper's §VI-D5 Δ-delay between charging a reorg and the swap taking effect),
+and serving — and returns a :class:`StepResult`.  ``run(stream)`` is a thin
+convenience wrapper producing the same :class:`repro.core.oreo.RunResult`
+trace the legacy batch runner did.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import oreo as _oreo
+from repro.core import workload as wl
+
+from .backends import StorageBackend
+from .policies import Decision, Policy
+
+
+@dataclasses.dataclass
+class StepResult:
+    """Everything observable about one query's pass through the loop."""
+
+    index: int
+    query: wl.Query
+    query_cost: float               # fraction of records accessed serving it
+    decision_state: int             # state per the decision maker
+    serving_state: Optional[int]    # physically materialized state
+    reorg_charged: bool             # alpha charged at this query
+    states_added: List[int]
+    states_removed: List[int]
+    decide_seconds: float
+    reorg_seconds: float            # prepare + any swap applied this query
+    serve_seconds: float
+
+
+class LayoutEngine:
+    """Drives a :class:`Policy` against a :class:`StorageBackend`, query by
+    query.  Single-use and stateful: feed it one logical stream (via
+    :meth:`step` or :meth:`run`) and read the trace with :meth:`result`.
+    """
+
+    def __init__(self, policy: Policy, backend: StorageBackend,
+                 delta: int = 0, name: Optional[str] = None):
+        self.policy = policy
+        self.backend = backend
+        self.delta = delta
+        self.name = name or policy.name
+        self.alpha = policy.alpha
+        self._started = False
+        self._index = 0
+        self._query_costs: List[float] = []
+        self._reorg_indices: List[int] = []
+        self._state_seq: List[int] = []
+        self._pending_swaps: List[Tuple[int, int]] = []  # (effective_idx, sid)
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        """Bind the policy and materialize the initial serving layout."""
+        if self._started:
+            return
+        initial_state = self.policy.bind(self.backend)
+        self.backend.activate(initial_state)
+        self._started = True
+
+    def step(self, query: wl.Query) -> StepResult:
+        """Advance the online loop by one query."""
+        self.start()
+        i = self._index
+        t0 = time.time()
+        decision = self.policy.decide(i, query, self.backend)
+        t1 = time.time()
+        if decision.reorg:
+            # Reorg cost charged at decision time (paper §VI-D5); the
+            # physical swap lands Δ queries later.  Backends may overlap
+            # the wait with background materialization.
+            self._reorg_indices.append(i)
+            self.backend.prepare(decision.state)
+            self._pending_swaps.append((i + self.delta, decision.state))
+        # Apply any swap whose background reorganization has finished; a
+        # state evicted while its swap was in flight is skipped.
+        while self._pending_swaps and self._pending_swaps[0][0] <= i:
+            _, sid = self._pending_swaps.pop(0)
+            if self.backend.has(sid):
+                self.backend.activate(sid)
+        t2 = time.time()
+        query_cost = float(self.backend.serve(query))
+        t3 = time.time()
+        self._query_costs.append(query_cost)
+        self._state_seq.append(decision.state)
+        self._index += 1
+        return StepResult(
+            index=i,
+            query=query,
+            query_cost=query_cost,
+            decision_state=decision.state,
+            serving_state=self.backend.serving_state,
+            reorg_charged=decision.reorg,
+            states_added=decision.added,
+            states_removed=decision.removed,
+            decide_seconds=t1 - t0,
+            reorg_seconds=t2 - t1,
+            serve_seconds=t3 - t2,
+        )
+
+    # ------------------------------------------------------------------
+    def result(self, name: Optional[str] = None) -> _oreo.RunResult:
+        """Trace of every query stepped so far, as a legacy RunResult."""
+        return _oreo.RunResult(
+            name=name or self.name,
+            alpha=self.alpha,
+            query_costs=np.asarray(self._query_costs),
+            reorg_indices=list(self._reorg_indices),
+            state_seq=np.asarray(self._state_seq, dtype=np.int64),
+            info=dict(self.policy.info()),
+        )
+
+    def run(self, stream: wl.WorkloadStream,
+            name: Optional[str] = None) -> _oreo.RunResult:
+        """Convenience wrapper: step every query of ``stream``."""
+        for query in stream:
+            self.step(query)
+        return self.result(name)

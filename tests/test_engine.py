@@ -1,0 +1,256 @@
+"""Tests for the stepwise LayoutEngine API: golden traces vs. the legacy
+batch runner, policy/backend protocol behavior, and satellite fixes."""
+import numpy as np
+import pytest
+
+from repro.core import (OreoConfig, build_default_layout, cost_model as cm,
+                        generate_workload, layouts, make_generator,
+                        make_templates, mts, predictors)
+from repro.core import layout_manager as lm
+from repro.core.oreo import OreoRunner, RunResult
+from repro.engine import (DiskBackend, GreedyPolicy, InMemoryBackend,
+                          LayoutEngine, MTSOptimalPolicy, OreoPolicy,
+                          RegretPolicy, StaticPolicy, StorageBackend)
+
+
+@pytest.fixture(scope="module")
+def bench():
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0, 100, size=(20_000, 8))
+    templates = make_templates(4, 8, rng)
+    stream = generate_workload(templates, data.min(0), data.max(0),
+                               total_queries=1500, seed=1,
+                               segment_length=(300, 500))
+    return data, stream
+
+
+def legacy_oreo_run(data, initial_layout, generator, config, stream):
+    """The pre-engine OreoRunner.run loop, inlined verbatim as the golden
+    reference for the stepwise engine."""
+    manager = lm.LayoutManager(data, generator, initial_layout,
+                               config.manager, seed=config.seed)
+    dumts = mts.DynamicUMTS(
+        alpha=config.alpha, initial_states=[initial_layout.layout_id],
+        seed=config.seed,
+        transition_fn=predictors.gamma_biased_transition(config.gamma),
+        stay_on_phase_start=config.stay_on_phase_start)
+    model = cm.CostModel(alpha=config.alpha)
+    query_costs, reorg_indices, state_seq = [], [], []
+    physical = manager.store[dumts.current_state]
+    physical.materialize(data)
+    pending = []
+    for i, q in enumerate(stream):
+        added, removed = manager.on_query(q, dumts.current_state)
+        for sid in added:
+            dumts.add_state(sid)
+        for sid in removed:
+            dumts.remove_state(sid)
+        costs = {}
+        for sid in set(dumts.states) | set(dumts.pending_additions):
+            costs[sid] = (model.query_cost(manager.store[sid], q)
+                          if sid in manager.store else 1.0)
+        prev = dumts.num_moves
+        state = dumts.observe(costs)
+        if dumts.num_moves > prev:
+            reorg_indices.append(i)
+            pending.append((i + config.delta, state))
+        while pending and pending[0][0] <= i:
+            _, sid = pending.pop(0)
+            if sid in manager.store:
+                physical = manager.store[sid]
+                physical.materialize(data)
+        query_costs.append(
+            float(layouts.eval_cost(physical.serving_meta(), q.lo, q.hi)))
+        state_seq.append(state)
+    return (np.asarray(query_costs), reorg_indices,
+            np.asarray(state_seq, dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Golden traces: engine == legacy loop, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delta", [0, 25])
+def test_engine_matches_legacy_oreo_trace(bench, delta):
+    data, stream = bench
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=40.0, seed=3, delta=delta,
+                     manager=lm.LayoutManagerConfig(target_partitions=16))
+    qc, ri, ss = legacy_oreo_run(data, build_default_layout(0, data, 16),
+                                 gen, cfg, stream)
+    policy = OreoPolicy(data, build_default_layout(0, data, 16), gen, cfg)
+    res = LayoutEngine(policy, InMemoryBackend(data),
+                       delta=cfg.delta).run(stream)
+    assert np.array_equal(qc, res.query_costs)      # bit-for-bit
+    assert ri == res.reorg_indices
+    assert np.array_equal(ss, res.state_seq)
+
+
+def test_deprecated_runner_delegates_to_engine(bench):
+    data, stream = bench
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=40.0, seed=3,
+                     manager=lm.LayoutManagerConfig(target_partitions=16))
+    with pytest.warns(DeprecationWarning):
+        shim = OreoRunner(data, build_default_layout(0, data, 16), gen, cfg)
+    res = shim.run(stream)
+    policy = OreoPolicy(data, build_default_layout(0, data, 16), gen, cfg)
+    direct = LayoutEngine(policy, InMemoryBackend(data)).run(stream)
+    assert np.array_equal(res.query_costs, direct.query_costs)
+    assert res.reorg_indices == direct.reorg_indices
+    assert res.info["competitive_bound"] == direct.info["competitive_bound"]
+
+
+# ---------------------------------------------------------------------------
+# Stepwise API
+# ---------------------------------------------------------------------------
+
+def test_step_returns_per_query_observability(bench):
+    data, stream = bench
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=30.0, seed=0,
+                     manager=lm.LayoutManagerConfig(target_partitions=16))
+    engine = LayoutEngine(
+        OreoPolicy(data, build_default_layout(0, data, 16), gen, cfg),
+        InMemoryBackend(data))
+    steps = [engine.step(q) for q in stream.queries[:400]]
+    assert [s.index for s in steps] == list(range(400))
+    assert all(0.0 <= s.query_cost <= 1.0 for s in steps)
+    assert all(s.serving_state is not None for s in steps)
+    charged = [s.index for s in steps if s.reorg_charged]
+    res = engine.result()
+    assert charged == res.reorg_indices
+    assert len(res.query_costs) == 400
+    # run() on the remaining queries continues the same trace
+    full = engine.run(stream.queries[400:800])
+    assert len(full.query_costs) == 800
+
+
+def test_dumts_invariant_moves_times_alpha_is_reorg_cost(bench):
+    """With no state evictions, every D-UMTS move is exactly one charged
+    reorganization: num_moves * alpha == total_reorg_cost."""
+    data, stream = bench
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=30.0, seed=1,
+                     manager=lm.LayoutManagerConfig(target_partitions=16,
+                                                    max_states=64))
+    policy = OreoPolicy(data, build_default_layout(0, data, 16), gen, cfg)
+    res = LayoutEngine(policy, InMemoryBackend(data)).run(stream)
+    assert policy.dumts.num_moves * cfg.alpha == res.total_reorg_cost
+    assert res.num_reorgs == policy.dumts.num_moves
+
+
+def test_baseline_policies_share_engine_loop(bench):
+    """Greedy / Regret / Static / MTS-Optimal all run through LayoutEngine
+    and keep their documented orderings."""
+    data, stream = bench
+    gen = make_generator("qdtree")
+    alpha = 40.0
+    init = lambda: build_default_layout(0, data, 16)
+
+    def run(policy):
+        return LayoutEngine(policy, InMemoryBackend(data)).run(stream)
+
+    greedy = run(GreedyPolicy(data, init(), gen, alpha))
+    regret = run(RegretPolicy(data, init(), gen, alpha))
+    static = run(StaticPolicy(data, stream, gen, alpha,
+                              target_partitions=16))
+    mtsopt = run(MTSOptimalPolicy(data, stream, gen, alpha,
+                                  target_partitions=16))
+    assert greedy.num_reorgs >= regret.num_reorgs
+    assert static.num_reorgs == 0
+    for res in (greedy, regret, static, mtsopt):
+        assert len(res.query_costs) == len(stream)
+        assert np.all(res.query_costs >= 0) and np.all(res.query_costs <= 1)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+def test_backend_protocol_conformance():
+    data = np.random.default_rng(0).uniform(0, 1, size=(100, 3))
+    assert isinstance(InMemoryBackend(data), StorageBackend)
+
+
+def test_batched_cost_estimation_bit_identical(bench):
+    """eval_cost_states == per-state eval_cost, bitwise, including layouts
+    with differing partition counts."""
+    data, stream = bench
+    gen = make_generator("qdtree")
+    metas = [build_default_layout(0, data, 16).meta,
+             gen(1, data, stream.queries[:100], 16).meta,
+             gen(2, data, stream.queries[200:300], 7).meta]
+    for q in stream.queries[:50]:
+        batched = layouts.eval_cost_states(metas, q.lo, q.hi)
+        singles = [float(layouts.eval_cost(m, q.lo, q.hi)) for m in metas]
+        assert batched.tolist() == singles
+
+
+def test_disk_backend_matches_in_memory_decisions(bench, tmp_path):
+    """The same engine + policy over DiskBackend reorganizes real partition
+    files in the background and serves the same logical costs."""
+    data, stream = bench
+    small = data[:8_000]
+    qs = stream.queries[:300]
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=15.0, seed=0, delta=10,
+                     manager=lm.LayoutManagerConfig(target_partitions=8,
+                                                    window_size=80,
+                                                    gen_every=40))
+    disk = DiskBackend(small, str(tmp_path / "table"), background=True)
+    res_disk = LayoutEngine(
+        OreoPolicy(small, build_default_layout(0, small, 8), gen, cfg),
+        disk, delta=cfg.delta).run(qs)
+    res_mem = LayoutEngine(
+        OreoPolicy(small, build_default_layout(0, small, 8), gen, cfg),
+        InMemoryBackend(small), delta=cfg.delta).run(qs)
+    assert np.array_equal(res_disk.state_seq, res_mem.state_seq)
+    assert res_disk.reorg_indices == res_mem.reorg_indices
+    # scanning real files reads exactly the rows the zone maps cannot skip
+    np.testing.assert_allclose(res_disk.query_costs, res_mem.query_costs,
+                               atol=1e-12)
+    disk.close()
+    # every charged reorg produced one background rewrite; the initial table
+    # load is accounted separately
+    assert len(disk.reorg_seconds) == res_disk.num_reorgs
+    assert disk.initial_write_seconds > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_cumulative_consistent_with_total_cost():
+    res = RunResult(name="x", alpha=10.0,
+                    query_costs=np.array([0.5, 0.25, 0.125, 0.0625]),
+                    reorg_indices=[1, 3],
+                    state_seq=np.zeros(4, dtype=np.int64))
+    first = res.cumulative()
+    assert first[-1] == pytest.approx(res.total_cost)
+    # repeated calls are stable and alpha is charged once per reorg index
+    assert np.array_equal(first, res.cumulative())
+    assert first[0] == pytest.approx(0.5)
+    assert first[1] == pytest.approx(0.5 + 0.25 + 10.0)
+
+
+def test_maybe_evict_terminates_on_empty_sample():
+    """With an empty R-TBS sample every pairwise distance is inf; eviction
+    must still make progress and respect max_states."""
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0, 100, size=(2_000, 4))
+    init = build_default_layout(0, data, 4)
+    cfg = lm.LayoutManagerConfig(target_partitions=4, max_states=2)
+    mgr = lm.LayoutManager(data, make_generator("qdtree"), init, cfg, seed=0)
+    # fill the store past the cap without feeding the R-TBS any queries
+    for i in range(1, 5):
+        mgr.store[i] = build_default_layout(i, data, 4)
+    removed = mgr._maybe_evict(current_state=0)
+    assert len(mgr.store) == cfg.max_states
+    assert 0 in mgr.store                       # never evicts current
+    assert removed == sorted(removed, reverse=True)  # newest evicted first
+
+
+def test_layout_distance_empty_sample_is_infinite():
+    assert layouts.layout_distance(np.zeros(0), np.zeros(0)) == np.inf
+    assert layouts.layout_distance(np.array([0.5]), np.array([0.5])) == 0.0

@@ -1,6 +1,8 @@
 """Tests for the §VIII / appendix extensions (multi-copy, asymmetric 2-state)."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.extensions import (MultiCopyDUMTS, offline_two_state,
