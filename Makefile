@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench quickstart install
+.PHONY: test bench bench-smoke quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -11,6 +11,9 @@ test:
 
 bench:
 	$(PYTHON) benchmarks/run.py --quick
+
+bench-smoke:
+	$(PYTHON) benchmarks/bench_decision_loop.py --smoke --out /tmp/bench_decision_loop_smoke.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -74,16 +74,42 @@ class LayoutManager:
         self.queries_seen = 0
         self.num_generated = 0
         self.num_admitted = 0
+        # Cost vectors of stored layouts, keyed by the R-TBS sample version:
+        # valid until the sample itself changes, so the eviction while-loop
+        # and periodic pruning stop recomputing the full |S| x |sample|
+        # matrix on every iteration.
+        self._cv_cache: Dict[int, np.ndarray] = {}
+        self._cv_version = -1
+        self._cv_bounds: Optional[tuple] = None
 
     # ------------------------------------------------------------------
+    def _sample_bounds(self) -> Optional[tuple]:
+        """Stacked (q_lo, q_hi) of the current R-TBS sample, refreshed (and
+        the cost-vector cache dropped) whenever the sample version moves."""
+        if self.rtbs.version != self._cv_version:
+            self._cv_cache.clear()
+            self._cv_version = self.rtbs.version
+            qs = self.rtbs.sample()
+            self._cv_bounds = wl.stack_queries(qs) if qs else None
+        return self._cv_bounds
+
     def _cost_vectors(self, candidates: Dict[int, layouts.Layout]
                       ) -> Dict[int, np.ndarray]:
-        qs = self.rtbs.sample()
-        if not qs:
+        bounds = self._sample_bounds()
+        if bounds is None:
             return {i: np.zeros(0) for i in candidates}
-        q_lo, q_hi = wl.stack_queries(qs)
-        return {i: layouts.cost_vector(lay.meta, q_lo, q_hi)
-                for i, lay in candidates.items()}
+        q_lo, q_hi = bounds
+        out: Dict[int, np.ndarray] = {}
+        for i, lay in candidates.items():
+            vec = self._cv_cache.get(i)
+            if vec is None:
+                vec = layouts.cost_vector(lay.meta, q_lo, q_hi)
+                # Only layouts actually admitted to the store are cached:
+                # a rejected candidate's id is reused by the next candidate.
+                if self.store.get(i) is lay:
+                    self._cv_cache[i] = vec
+            out[i] = vec
+        return out
 
     def _candidate_queries(self) -> List[List[wl.Query]]:
         src = self.config.candidate_source
@@ -152,6 +178,7 @@ class LayoutManager:
                 # the newest non-current state so the loop always progresses.
                 best = max(ids)
             del self.store[best]
+            self._cv_cache.pop(best, None)
             removed.append(best)
         return removed
 
@@ -170,6 +197,7 @@ class LayoutManager:
                     continue
                 if layouts.layout_distance(vecs[i], vecs[j]) < self.config.epsilon / 2:
                     del self.store[i]
+                    self._cv_cache.pop(i, None)
                     removed.append(i)
                     break
         return removed

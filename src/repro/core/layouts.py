@@ -47,6 +47,12 @@ def metadata_from_assignment(data: np.ndarray, assignment: np.ndarray,
     ``row_scale`` scales row counts when ``data`` is a sample standing in for
     a larger table (the paper builds layouts and estimates metadata from
     0.1-1% samples; the full table is only touched on reorganization).
+
+    The per-partition min/max reduction runs as one ``np.minimum.reduceat`` /
+    ``np.maximum.reduceat`` pair over the sorted row order — no Python loop
+    over partitions on the reorganization path.  Empty partitions keep the
+    [+inf, -inf] identity bounds and zero rows; rows assigned outside
+    ``[0, num_partitions)`` are ignored.
     """
     n, c = data.shape
     mins = np.full((num_partitions, c), np.inf)
@@ -55,13 +61,18 @@ def metadata_from_assignment(data: np.ndarray, assignment: np.ndarray,
     order = np.argsort(assignment, kind="stable")
     sorted_assign = assignment[order]
     bounds = np.searchsorted(sorted_assign, np.arange(num_partitions + 1))
-    for p in range(num_partitions):
-        lo, hi = bounds[p], bounds[p + 1]
-        if hi > lo:
-            chunk = data[order[lo:hi]]
-            mins[p] = chunk.min(axis=0)
-            maxs[p] = chunk.max(axis=0)
-            rows[p] = (hi - lo) * row_scale
+    starts, ends = bounds[:-1], bounds[1:]
+    nonempty = ends > starts
+    if nonempty.any():
+        # Rows with in-range assignments, grouped contiguously by partition.
+        # reduceat segment i spans [start_i, start_{i+1}) over the non-empty
+        # starts, which equals [start_i, end_i) because empty partitions have
+        # zero width; the final segment ends exactly at the slice boundary.
+        grouped = data[order[bounds[0]:bounds[-1]]]
+        seg = starts[nonempty] - bounds[0]
+        mins[nonempty] = np.minimum.reduceat(grouped, seg, axis=0)
+        maxs[nonempty] = np.maximum.reduceat(grouped, seg, axis=0)
+        rows[nonempty] = (ends[nonempty] - starts[nonempty]) * row_scale
     return PartitionMetadata(mins=mins, maxs=maxs, rows=rows)
 
 
@@ -109,6 +120,26 @@ class Layout:
 # ---------------------------------------------------------------------------
 # Query cost evaluation ("eval_skipped")
 # ---------------------------------------------------------------------------
+#
+# Every cost path below reduces the scan matrix with the SAME contiguous
+# einsum contraction (``scanned_dot``).  numpy's einsum uses one
+# sum-of-products inner kernel for the 'p,p->', 'qp,p->q' and 'sp,sp->s'
+# signatures on contiguous operands, so single-query, batched-query, and
+# batched-state evaluation (including the engine's packed StateMatrix plane)
+# are bit-identical by construction — unlike mixing ``@``/BLAS dots, whose
+# accumulation order differs from einsum's on some shapes.
+
+
+def scanned_dot(scanned: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    """Deterministic ``scanned · rows`` shared by all cost paths.
+
+    ``scanned`` is bool (P,) or (Q, P); ``rows`` is float64 (P,).  Operands
+    must be contiguous along P (freshly computed scan matrices always are).
+    """
+    if scanned.ndim == 1:
+        return np.einsum("p,p->", scanned, rows)
+    return np.einsum("qp,p->q", scanned, rows)
+
 
 def partitions_scanned(meta: PartitionMetadata, q_lo: np.ndarray,
                        q_hi: np.ndarray) -> np.ndarray:
@@ -135,7 +166,7 @@ def eval_cost(meta: PartitionMetadata, q_lo: np.ndarray,
     """
     scanned = partitions_scanned(meta, q_lo, q_hi)
     total = max(meta.total_rows, 1)
-    cost = (scanned @ self_rows(meta)) / total
+    cost = scanned_dot(scanned, self_rows(meta)) / total
     return cost
 
 
@@ -196,5 +227,5 @@ def eval_cost_states(metas: Sequence[PartitionMetadata], q_lo: np.ndarray,
     out = np.empty(s)
     for i, m in enumerate(metas):
         total = max(m.total_rows, 1)
-        out[i] = (scanned[i, :counts[i]] @ self_rows(m)) / total
+        out[i] = scanned_dot(scanned[i, :counts[i]], self_rows(m)) / total
     return out

@@ -78,6 +78,10 @@ class RTBSample(Generic[T]):
         self.items: List[T] = []
         self.arrival: List[int] = []
         self.t = 0
+        #: Bumped whenever the retained sample changes.  Consumers (e.g. the
+        #: LayoutManager's cost-vector cache) key derived data on this counter
+        #: so rejected arrivals don't invalidate anything.
+        self.version = 0
 
     def _weights(self) -> np.ndarray:
         ages = self.t - np.asarray(self.arrival, dtype=np.float64)
@@ -88,6 +92,7 @@ class RTBSample(Generic[T]):
         if len(self.items) < self.size:
             self.items.append(item)
             self.arrival.append(self.t)
+            self.version += 1
             return
         w = self._weights()
         # Accept the (weight-1) newcomer vs. the reservoir's mean weight.
@@ -98,6 +103,7 @@ class RTBSample(Generic[T]):
             evict = int(self.rng.choice(self.size, p=inv / inv.sum()))
             self.items[evict] = item
             self.arrival[evict] = self.t
+            self.version += 1
 
     def sample(self) -> List[T]:
         return list(self.items)

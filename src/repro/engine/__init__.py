@@ -20,15 +20,22 @@ Layers:
 * :class:`StorageBackend` — physical layer: :class:`InMemoryBackend`
   (vectorized numpy simulation) and :class:`DiskBackend` (versioned
   partition files with background materialization).
+* :class:`StateMatrix` — the packed, incrementally-maintained metadata
+  plane every registry-backed backend scores queries against, with
+  pluggable compute (:func:`repro.engine.compute.scan_matrix`: ``numpy``
+  exact / ``pallas`` kernel).
 """
 from repro.engine.backends import DiskBackend, InMemoryBackend, StorageBackend
+from repro.engine.compute import scan_matrix
 from repro.engine.core import LayoutEngine, StepResult
 from repro.engine.policies import (Decision, GreedyPolicy, MTSOptimalPolicy,
                                    OfflineOptimalPolicy, OreoPolicy, Policy,
                                    RegretPolicy, StaticPolicy)
+from repro.engine.state_matrix import StateMatrix
 
 __all__ = [
     "Decision", "DiskBackend", "GreedyPolicy", "InMemoryBackend",
     "LayoutEngine", "MTSOptimalPolicy", "OfflineOptimalPolicy", "OreoPolicy",
-    "Policy", "RegretPolicy", "StaticPolicy", "StepResult", "StorageBackend",
+    "Policy", "RegretPolicy", "StateMatrix", "StaticPolicy", "StepResult",
+    "StorageBackend", "scan_matrix",
 ]

@@ -19,6 +19,9 @@ from repro.core import layouts as L
 from repro.core import workload as wl
 from repro.data.partition_store import PartitionStore
 
+from . import compute
+from .state_matrix import StateMatrix
+
 
 @runtime_checkable
 class StorageBackend(Protocol):
@@ -67,15 +70,39 @@ class StorageBackend(Protocol):
 
 
 class _RegistryMixin:
-    """Shared metadata-only registry + batched estimation."""
+    """Shared metadata registry + batched estimation over a StateMatrix.
+
+    The registry mirrors every registered layout's zone maps into a packed
+    :class:`repro.engine.state_matrix.StateMatrix` (O(P*C) per register /
+    deregister), so per-query estimation is one masked matrix op over
+    persistent tensors instead of a per-query re-pad of all S states.
+
+    ``compute`` selects the estimation path: ``"numpy"`` (default, exact),
+    ``"pallas"`` (kernel-backed, float32), or ``"reference"`` — the original
+    per-query :func:`repro.core.layouts.eval_cost_states` re-padding path,
+    kept as the golden reference and as the benchmark baseline.
+    """
 
     _layouts: Dict[int, L.Layout]
 
+    def _init_registry(self, compute: str = "numpy") -> None:
+        if compute not in ("numpy", "pallas", "reference"):
+            raise ValueError(f"unknown compute mode: {compute!r}")
+        self._compute = compute
+        self._layouts = {}
+        self._matrix: Optional[StateMatrix] = (
+            None if compute == "reference"
+            else StateMatrix(compute_backend=compute))
+
     def register(self, layout: L.Layout) -> None:
         self._layouts[layout.layout_id] = layout
+        if self._matrix is not None:
+            self._matrix.register(layout.layout_id, layout.meta)
 
     def deregister(self, state_id: int) -> None:
         self._layouts.pop(state_id, None)
+        if self._matrix is not None:
+            self._matrix.deregister(state_id)
 
     def has(self, state_id: int) -> bool:
         return state_id in self._layouts
@@ -87,13 +114,21 @@ class _RegistryMixin:
     def states(self) -> List[int]:
         return sorted(self._layouts)
 
+    @property
+    def state_matrix(self) -> Optional[StateMatrix]:
+        """The packed metadata plane (None in ``reference`` mode)."""
+        return self._matrix
+
     def estimate_costs(self, state_ids: Sequence[int],
                        query: wl.Query) -> Dict[int, float]:
         """Batched metadata-only c(s, q) for every requested state.
 
-        One vectorized :func:`repro.core.layouts.eval_cost_states` call over
-        all states (bit-identical to evaluating each state individually).
+        One masked matrix op over the persistent StateMatrix tensors —
+        bit-identical (numpy compute) to ``eval_cost_states`` and to
+        evaluating each state individually with ``eval_cost``.
         """
+        if self._matrix is not None:
+            return self._matrix.estimate_costs(state_ids, query.lo, query.hi)
         ids = list(state_ids)
         metas = [self._layouts[s].meta for s in ids]
         costs = L.eval_cost_states(metas, query.lo, query.hi)
@@ -105,12 +140,25 @@ class InMemoryBackend(_RegistryMixin):
 
     Materialization computes exact zone maps over the in-memory table;
     serving charges the metadata-derived fraction of records accessed.
+    The serving layout's *exact* (materialized) zone maps live in the packed
+    plane as a shadow state under the reserved id ``SERVING_SHADOW`` (-1),
+    so each ``estimate_costs`` call fuses the serve score into the same
+    masked matrix op and :meth:`serve` is usually a memo lookup — still
+    bit-identical to ``eval_cost`` on the serving metadata.
+    :meth:`serve_block` scores whole query blocks for the engine's batched
+    ``run`` fast path.
     """
 
-    def __init__(self, data: np.ndarray):
+    #: Reserved StateMatrix id for the materialized serving layout's zone
+    #: maps.  Policies must use non-negative state ids.
+    SERVING_SHADOW = -1
+
+    def __init__(self, data: np.ndarray, compute: str = "numpy"):
         self.data = data
-        self._layouts: Dict[int, L.Layout] = {}
+        self._init_registry(compute)
         self._serving: Optional[L.Layout] = None
+        self._serving_cache: Optional[tuple] = None
+        self._serve_memo: Optional[tuple] = None
 
     def prepare(self, state_id: int) -> None:
         # In-memory reorganization is instantaneous; nothing to overlap.
@@ -118,16 +166,66 @@ class InMemoryBackend(_RegistryMixin):
 
     def activate(self, state_id: int) -> None:
         layout = self._layouts[state_id]
-        layout.materialize(self.data)
+        meta = layout.materialize(self.data)
         self._serving = layout
+        self._serving_cache = (np.ascontiguousarray(meta.mins.T),
+                               np.ascontiguousarray(meta.maxs.T),
+                               L.self_rows(meta), max(meta.total_rows, 1))
+        self._serve_memo = None
+        if self._matrix is not None:
+            self._matrix.register(self.SERVING_SHADOW, meta)
 
     @property
     def serving_state(self) -> Optional[int]:
         return None if self._serving is None else self._serving.layout_id
 
+    def estimate_costs(self, state_ids: Sequence[int],
+                       query: wl.Query) -> Dict[int, float]:
+        m = self._matrix
+        if m is None:
+            return super().estimate_costs(state_ids, query)
+        costs = m.estimate(query.lo, query.hi)
+        out = {s: float(costs[m.slot(s)]) for s in state_ids}
+        if self._compute == "numpy" and self.SERVING_SHADOW in m:
+            # The shadow serving state rode along in the same packed pass:
+            # remember its score so serve() on this query is a lookup.
+            # (numpy only — the pallas plane estimates in float32, and serve
+            # must stay exact.)
+            self._serve_memo = (query,
+                                float(costs[m.slot(self.SERVING_SHADOW)]))
+        return out
+
     def serve(self, query: wl.Query) -> float:
-        return float(L.eval_cost(self._serving.serving_meta(),
-                                 query.lo, query.hi))
+        if self._compute == "reference":
+            return float(L.eval_cost(self._serving.serving_meta(),
+                                     query.lo, query.hi))
+        memo = self._serve_memo
+        if memo is not None and memo[0] is query:
+            return memo[1]
+        minsT, maxsT, rows, total = self._serving_cache
+        acc = compute.masked_overlap(minsT, maxsT, query.lo, query.hi)
+        return float(L.scanned_dot(acc, rows) / total)
+
+    def serve_block(self, q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
+        """Serve a (B, C) block of queries against the current layout.
+
+        Used by ``LayoutEngine.run``'s batched fast path between layout
+        swaps; each element is bit-identical to the per-query :meth:`serve`.
+        """
+        if self._compute == "reference":
+            return np.atleast_1d(L.eval_cost(self._serving.serving_meta(),
+                                             q_lo, q_hi))
+        if len(q_lo) == 0:
+            return np.zeros(0)
+        minsT, maxsT, rows, total = self._serving_cache
+        acc: Optional[np.ndarray] = None
+        for c in range(minsT.shape[0]):
+            term = minsT[c] <= q_hi[:, c, None]            # (B, P)
+            acc = term if acc is None else np.logical_and(acc, term, out=acc)
+            np.logical_and(acc, maxsT[c] >= q_lo[:, c, None], out=acc)
+        if acc is None:     # zero-column table: every partition is scanned
+            acc = np.ones((len(q_lo), minsT.shape[1]), dtype=bool)
+        return L.scanned_dot(acc, rows) / total
 
 
 class DiskBackend(_RegistryMixin):
@@ -143,13 +241,13 @@ class DiskBackend(_RegistryMixin):
     """
 
     def __init__(self, data: np.ndarray, root: str, compress: bool = True,
-                 background: bool = True):
+                 background: bool = True, compute: str = "numpy"):
         self.data = data
         self.root = root
         self.compress = compress
         self.background = background
         os.makedirs(root, exist_ok=True)
-        self._layouts: Dict[int, L.Layout] = {}
+        self._init_registry(compute)
         self._serving_layout: Optional[L.Layout] = None
         self._serving_store: Optional[PartitionStore] = None
         self._version = 0

@@ -1,0 +1,74 @@
+"""Pluggable compute backends for the metadata plane's scan matrix.
+
+Everything the decision loop evaluates — service-cost estimates over all
+candidate states, cost vectors over the R-TBS sample — reduces to the
+(Q, P) interval-overlap *scan matrix* over C columns.  This module is the
+single entry point for computing it:
+
+* ``numpy`` (default): exact float64 comparisons; bit-identical to
+  :func:`repro.core.layouts.partitions_scanned`.
+* ``pallas``: the TPU kernel :func:`repro.kernels.pruning.scan_matrix_pallas`
+  (compiled on TPU/GPU, interpreter on CPU — auto-selected).  Operands are
+  cast to float32 on the way in, so results are exact only for
+  float32-representable bounds; use it for throughput on accelerators, not
+  for the bit-identical decision paths.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+BACKENDS = ("numpy", "pallas")
+
+
+def scan_matrix(q_lo: np.ndarray, q_hi: np.ndarray, mins: np.ndarray,
+                maxs: np.ndarray, backend: str = "numpy") -> np.ndarray:
+    """(Q, C) query bounds x (P, C) partition bounds -> (Q, P) bool.
+
+    ``out[q, p]`` is True iff partition p must be scanned for query q, i.e.
+    every column's [min, max] zone overlaps the query's [lo, hi] range.
+    """
+    if backend == "numpy":
+        overlap = ((mins[None, :, :] <= q_hi[:, None, :])
+                   & (maxs[None, :, :] >= q_lo[:, None, :]))
+        return overlap.all(axis=-1)
+    if backend == "pallas":
+        return _scan_matrix_pallas(q_lo, q_hi, mins, maxs)
+    raise ValueError(f"unknown compute backend: {backend!r} "
+                     f"(expected one of {BACKENDS})")
+
+
+def masked_overlap(minsT: np.ndarray, maxsT: np.ndarray, q_lo: np.ndarray,
+                   q_hi: np.ndarray) -> np.ndarray:
+    """Exact overlap test over column-major bounds, one query at a time.
+
+    ``minsT``/``maxsT`` are ``(C, ..., P)`` (leading column axis; the rest
+    broadcasts — ``(C, P)`` for a single layout, ``(C, S, P)`` for a packed
+    plane).  Columns whose query bound is infinite are skipped outright:
+    ``min <= +inf`` and ``max >= -inf`` are identically True, so skipping
+    cannot change the result — it is bit-identical to the full comparison.
+    This is the single implementation behind StateMatrix estimation and
+    InMemoryBackend serving; their cross-path bit-identity rests on it.
+    """
+    acc: Optional[np.ndarray] = None
+    for c in (q_hi != np.inf).nonzero()[0].tolist():
+        term = minsT[c] <= q_hi[c]
+        acc = term if acc is None else np.logical_and(acc, term, out=acc)
+    for c in (q_lo != -np.inf).nonzero()[0].tolist():
+        term = maxsT[c] >= q_lo[c]
+        acc = term if acc is None else np.logical_and(acc, term, out=acc)
+    if acc is None:     # fully unbounded query: every partition is scanned
+        acc = np.ones(minsT.shape[1:], dtype=bool)
+    return acc
+
+
+def _scan_matrix_pallas(q_lo, q_hi, mins, maxs) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.kernels.pruning import pruning
+
+    out = pruning.scan_matrix_pallas(
+        jnp.asarray(q_lo, jnp.float32), jnp.asarray(q_hi, jnp.float32),
+        jnp.asarray(mins, jnp.float32), jnp.asarray(maxs, jnp.float32))
+    return np.asarray(out) > 0.5

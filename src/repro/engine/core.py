@@ -3,15 +3,19 @@
 ``LayoutEngine.step(query)`` interleaves the three concerns of Figure 1 for a
 single query — decision (policy), physical reorganization (backend, with the
 paper's §VI-D5 Δ-delay between charging a reorg and the swap taking effect),
-and serving — and returns a :class:`StepResult`.  ``run(stream)`` is a thin
-convenience wrapper producing the same :class:`repro.core.oreo.RunResult`
-trace the legacy batch runner did.
+and serving — and returns a :class:`StepResult`.  ``run(stream)`` produces
+the same :class:`repro.core.oreo.RunResult` trace the legacy batch runner
+did; when the backend supports block serving it pre-stacks the stream's
+query bounds and evaluates serve costs in blocks between layout swaps (the
+decision loop stays strictly per-query), which is bit-identical to stepping
+because decisions never depend on realized serve costs.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import List, Optional, Tuple
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -57,7 +61,9 @@ class LayoutEngine:
         self._query_costs: List[float] = []
         self._reorg_indices: List[int] = []
         self._state_seq: List[int] = []
-        self._pending_swaps: List[Tuple[int, int]] = []  # (effective_idx, sid)
+        # (effective_idx, sid); appended in index order, drained from the
+        # front — a deque keeps the drain O(1) per swap.
+        self._pending_swaps: Deque[Tuple[int, int]] = collections.deque()
 
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -68,29 +74,38 @@ class LayoutEngine:
         self.backend.activate(initial_state)
         self._started = True
 
+    def _charge_reorg(self, i: int, decision: Decision) -> None:
+        """Bookkeeping for a charged reorganization (shared by step/run).
+
+        The cost is charged at decision time (paper §VI-D5); the physical
+        swap lands Δ queries later.  Backends may overlap the wait with
+        background materialization started by ``prepare``.
+        """
+        if decision.reorg:
+            self._reorg_indices.append(i)
+            self.backend.prepare(decision.state)
+            self._pending_swaps.append((i + self.delta, decision.state))
+
+    def _apply_due_swaps(self, i: int) -> None:
+        """Apply any swap whose background reorganization has finished; a
+        state evicted while its swap was in flight is skipped."""
+        while self._pending_swaps and self._pending_swaps[0][0] <= i:
+            _, sid = self._pending_swaps.popleft()
+            if self.backend.has(sid):
+                self.backend.activate(sid)
+
     def step(self, query: wl.Query) -> StepResult:
         """Advance the online loop by one query."""
         self.start()
         i = self._index
-        t0 = time.time()
+        t0 = time.perf_counter()
         decision = self.policy.decide(i, query, self.backend)
-        t1 = time.time()
-        if decision.reorg:
-            # Reorg cost charged at decision time (paper §VI-D5); the
-            # physical swap lands Δ queries later.  Backends may overlap
-            # the wait with background materialization.
-            self._reorg_indices.append(i)
-            self.backend.prepare(decision.state)
-            self._pending_swaps.append((i + self.delta, decision.state))
-        # Apply any swap whose background reorganization has finished; a
-        # state evicted while its swap was in flight is skipped.
-        while self._pending_swaps and self._pending_swaps[0][0] <= i:
-            _, sid = self._pending_swaps.pop(0)
-            if self.backend.has(sid):
-                self.backend.activate(sid)
-        t2 = time.time()
+        t1 = time.perf_counter()
+        self._charge_reorg(i, decision)
+        self._apply_due_swaps(i)
+        t2 = time.perf_counter()
         query_cost = float(self.backend.serve(query))
-        t3 = time.time()
+        t3 = time.perf_counter()
         self._query_costs.append(query_cost)
         self._state_seq.append(decision.state)
         self._index += 1
@@ -120,9 +135,49 @@ class LayoutEngine:
             info=dict(self.policy.info()),
         )
 
-    def run(self, stream: wl.WorkloadStream,
-            name: Optional[str] = None) -> _oreo.RunResult:
-        """Convenience wrapper: step every query of ``stream``."""
-        for query in stream:
-            self.step(query)
+    def run(self, stream: wl.WorkloadStream, name: Optional[str] = None,
+            batch_serve: Optional[bool] = None) -> _oreo.RunResult:
+        """Step every query of ``stream`` and return the trace.
+
+        When the backend exposes ``serve_block`` (``batch_serve=None`` auto-
+        detects; pass False to force the stepwise loop), serve costs are
+        evaluated in blocks of consecutive queries served by the same
+        physical layout: the per-query decision loop runs unchanged, serves
+        are deferred, and each block is flushed right before a layout swap
+        takes effect.  The resulting trace is bit-identical to stepping.
+        """
+        queries = list(stream)
+        has_block = callable(getattr(self.backend, "serve_block", None))
+        if batch_serve is None:
+            batch_serve = has_block
+        elif batch_serve and not has_block:
+            raise ValueError(
+                "batch_serve=True requires a backend with serve_block")
+        if not batch_serve:
+            for query in queries:
+                self.step(query)
+            return self.result(name)
+        if not queries:
+            return self.result(name)
+        self.start()
+        q_lo, q_hi = wl.stack_queries(queries)
+        costs = np.empty(len(queries))
+        block = 0
+        for k, query in enumerate(queries):
+            i = self._index
+            decision = self.policy.decide(i, query, self.backend)
+            self._charge_reorg(i, decision)
+            if self._pending_swaps and self._pending_swaps[0][0] <= i:
+                # Flush the open serve block before the swap changes the
+                # serving layout (a step serves *after* applying due swaps,
+                # so query k itself belongs to the next block).
+                if k > block:
+                    costs[block:k] = self.backend.serve_block(
+                        q_lo[block:k], q_hi[block:k])
+                block = k
+                self._apply_due_swaps(i)
+            self._state_seq.append(decision.state)
+            self._index += 1
+        costs[block:] = self.backend.serve_block(q_lo[block:], q_hi[block:])
+        self._query_costs.extend(float(c) for c in costs)
         return self.result(name)

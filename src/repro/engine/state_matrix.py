@@ -1,0 +1,238 @@
+"""StateMatrix: the incrementally-maintained packed metadata plane.
+
+OREO's decision loop is metadata-only: every query is scored against every
+candidate layout's zone maps.  Before this plane existed, the hot path
+re-padded all S states' metadata into a fresh ``(S, P_max, C)`` tensor per
+query (``layouts.eval_cost_states``).  :class:`StateMatrix` keeps that packed
+representation *persistent* — padded ``mins``/``maxs``, ``rows``, ``totals``
+and id <-> slot maps — updated in O(P*C) on :meth:`register` /
+:meth:`deregister` instead of rebuilt in O(S*P*C) per query.
+
+Scoring details (numpy backend, the default):
+
+* bounds are also stored column-major (``(C, S, P)``) so the per-query
+  overlap test broadcasts over *leading* axes — numpy's inner loops then run
+  over contiguous (S, P) planes instead of the pathological length-C
+  trailing axis;
+* columns whose query bound is infinite (non-predicate columns — the common
+  case for template workloads) are skipped outright: ``min <= +inf`` and
+  ``max >= -inf`` are identically True, so the skipped comparisons cannot
+  change the scan matrix;
+* the final reduction uses :func:`repro.core.layouts.scanned_dot` (one
+  contiguous einsum kernel for single and batched signatures), so estimates
+  are bit-identical to ``eval_cost_states`` and per-state ``eval_cost``.
+
+The ``pallas`` backend routes the overlap test through
+:func:`repro.engine.compute.scan_matrix` (float32 kernel; see that module
+for the exactness caveat).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import layouts as L
+
+from . import compute
+
+
+class StateMatrix:
+    """Persistent packed zone maps for all registered layout states."""
+
+    def __init__(self, compute_backend: str = "numpy",
+                 state_capacity: int = 8):
+        if compute_backend not in compute.BACKENDS:
+            raise ValueError(f"unknown compute backend: {compute_backend!r}")
+        self.compute_backend = compute_backend
+        self._scap = max(int(state_capacity), 1)
+        self._pcap = 0
+        self._c: Optional[int] = None
+        self._n = 0
+        self._ids: List[int] = []              # slot -> state id
+        self._slots: Dict[int, int] = {}       # state id -> slot
+        self._counts: List[int] = []           # slot -> partition count
+        self._totals: List[int] = []           # slot -> max(total_rows, 1)
+        self._rows_exact: List[np.ndarray] = []  # slot -> contiguous (P_s,) f64
+        self._mins: Optional[np.ndarray] = None    # (S_cap, P_cap, C)
+        self._maxs: Optional[np.ndarray] = None
+        self._minsT: Optional[np.ndarray] = None   # (C, S_cap, P_cap)
+        self._maxsT: Optional[np.ndarray] = None
+        self._rows: Optional[np.ndarray] = None    # (S_cap, P_cap) f64
+        self._totals_arr: Optional[np.ndarray] = None  # (S_cap,) f64
+        self._uniform = True    # all counts == P_cap -> batched reduction
+        #: Bumped on every register/deregister; consumers may key caches on it.
+        self.version = 0
+
+    # -- introspection --------------------------------------------------
+    def __len__(self) -> int:
+        return self._n
+
+    def __contains__(self, state_id: int) -> bool:
+        return state_id in self._slots
+
+    @property
+    def state_ids(self) -> List[int]:
+        """Registered state ids in slot order."""
+        return list(self._ids)
+
+    @property
+    def num_columns(self) -> Optional[int]:
+        return self._c
+
+    @property
+    def partition_capacity(self) -> int:
+        return self._pcap
+
+    def slot(self, state_id: int) -> int:
+        """Packed slot index of a registered state (KeyError if unknown)."""
+        return self._slots[state_id]
+
+    def metadata(self, state_id: int) -> L.PartitionMetadata:
+        """The registered state's exact zone maps (views into the plane)."""
+        slot = self._slots[state_id]
+        p = self._counts[slot]
+        return L.PartitionMetadata(mins=self._mins[slot, :p],
+                                   maxs=self._maxs[slot, :p],
+                                   rows=self._rows[slot, :p])
+
+    # -- allocation -----------------------------------------------------
+    def _alloc(self, scap: int, pcap: int) -> None:
+        c = self._c
+        mins = np.full((scap, pcap, c), np.inf)
+        maxs = np.full((scap, pcap, c), -np.inf)
+        minsT = np.full((c, scap, pcap), np.inf)
+        maxsT = np.full((c, scap, pcap), -np.inf)
+        rows = np.zeros((scap, pcap))
+        totals = np.ones(scap)
+        n = self._n
+        if n and self._mins is not None:
+            old_p = self._pcap
+            mins[:n, :old_p] = self._mins[:n]
+            maxs[:n, :old_p] = self._maxs[:n]
+            minsT[:, :n, :old_p] = self._minsT[:, :n]
+            maxsT[:, :n, :old_p] = self._maxsT[:, :n]
+            rows[:n, :old_p] = self._rows[:n]
+            totals[:n] = self._totals_arr[:n]
+        self._mins, self._maxs = mins, maxs
+        self._minsT, self._maxsT = minsT, maxsT
+        self._rows, self._totals_arr = rows, totals
+        self._scap, self._pcap = scap, pcap
+
+    def _refresh_uniform(self) -> None:
+        self._uniform = all(p == self._pcap for p in self._counts)
+
+    # -- maintenance (O(P*C) per call) ----------------------------------
+    def register(self, state_id: int, meta: L.PartitionMetadata) -> None:
+        """Add (or overwrite) one state's zone maps in the packed plane."""
+        if self._c is None:
+            self._c = meta.num_columns
+        elif meta.num_columns != self._c:
+            raise ValueError(
+                f"state {state_id}: {meta.num_columns} columns, plane has "
+                f"{self._c}")
+        p = meta.num_partitions
+        slot = self._slots.get(state_id)
+        if slot is None:
+            if self._mins is None or self._n == self._scap or p > self._pcap:
+                self._alloc(max(self._scap, 2 * self._n, 1),
+                            max(self._pcap, p))
+            slot = self._n
+            self._n += 1
+            self._ids.append(state_id)
+            self._slots[state_id] = slot
+            self._counts.append(p)
+            self._totals.append(1)
+            self._rows_exact.append(np.zeros(0))
+        elif p > self._pcap:
+            self._alloc(self._scap, p)
+        self._mins[slot, :p] = meta.mins
+        self._mins[slot, p:] = np.inf
+        self._maxs[slot, :p] = meta.maxs
+        self._maxs[slot, p:] = -np.inf
+        self._minsT[:, slot, :p] = meta.mins.T
+        self._minsT[:, slot, p:] = np.inf
+        self._maxsT[:, slot, :p] = meta.maxs.T
+        self._maxsT[:, slot, p:] = -np.inf
+        self._rows[slot, :p] = meta.rows
+        self._rows[slot, p:] = 0.0
+        total = max(meta.total_rows, 1)
+        self._counts[slot] = p
+        self._totals[slot] = total
+        self._totals_arr[slot] = total
+        self._rows_exact[slot] = L.self_rows(meta)
+        self._refresh_uniform()
+        self.version += 1
+
+    def deregister(self, state_id: int) -> None:
+        """Drop one state; the last slot is swapped into the hole (O(P*C)).
+        Unknown ids are a no-op."""
+        slot = self._slots.pop(state_id, None)
+        if slot is None:
+            return
+        last = self._n - 1
+        if slot != last:
+            self._mins[slot] = self._mins[last]
+            self._maxs[slot] = self._maxs[last]
+            self._minsT[:, slot] = self._minsT[:, last]
+            self._maxsT[:, slot] = self._maxsT[:, last]
+            self._rows[slot] = self._rows[last]
+            self._totals_arr[slot] = self._totals_arr[last]
+            moved = self._ids[last]
+            self._ids[slot] = moved
+            self._slots[moved] = slot
+            self._counts[slot] = self._counts[last]
+            self._totals[slot] = self._totals[last]
+            self._rows_exact[slot] = self._rows_exact[last]
+        self._ids.pop()
+        self._counts.pop()
+        self._totals.pop()
+        self._rows_exact.pop()
+        self._n = last
+        self._refresh_uniform()
+        self.version += 1
+
+    # -- scoring --------------------------------------------------------
+    def _scanned(self, q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
+        """(n, P_cap) bool scan matrix over all registered states."""
+        n = self._n
+        if self.compute_backend == "pallas":
+            mins2d = self._mins[:n].reshape(n * self._pcap, self._c)
+            maxs2d = self._maxs[:n].reshape(n * self._pcap, self._c)
+            return compute.scan_matrix(q_lo[None], q_hi[None], mins2d,
+                                       maxs2d, backend="pallas",
+                                       )[0].reshape(n, self._pcap)
+        return compute.masked_overlap(self._minsT[:, :n, :],
+                                      self._maxsT[:, :n, :], q_lo, q_hi)
+
+    def estimate(self, q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
+        """Service cost c(s, q) of one query under every registered state.
+
+        Returns float64 (n,) in slot order — bit-identical (numpy backend)
+        to ``eval_cost_states`` / per-state ``eval_cost`` over the same
+        metadata.
+        """
+        n = self._n
+        if n == 0:
+            return np.zeros(0)
+        scanned = self._scanned(q_lo, q_hi)
+        if self._uniform:
+            # All states fill the full partition width: one batched einsum
+            # (same contiguous kernel as scanned_dot, so still bit-exact).
+            return (np.einsum("sp,sp->s", scanned, self._rows[:n])
+                    / self._totals_arr[:n])
+        out = np.empty(n)
+        for s in range(n):
+            out[s] = (L.scanned_dot(scanned[s, :self._counts[s]],
+                                    self._rows_exact[s]) / self._totals[s])
+        return out
+
+    def estimate_costs(self, state_ids: Sequence[int], q_lo: np.ndarray,
+                       q_hi: np.ndarray) -> Dict[int, float]:
+        """Per-id costs for the requested states (scored all at once)."""
+        ids = list(state_ids)
+        if not ids:
+            return {}
+        costs = self.estimate(q_lo, q_hi)
+        slots = self._slots
+        return {s: float(costs[slots[s]]) for s in ids}

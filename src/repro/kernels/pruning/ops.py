@@ -12,16 +12,13 @@ import jax.numpy as jnp
 from repro.kernels.pruning import pruning, ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def scan_matrix(q_lo, q_hi, p_min, p_max, use_kernel: bool = True,
                 **block_kw) -> jax.Array:
     if not use_kernel:
         return ref.scan_matrix(q_lo, q_hi, p_min, p_max)
-    return pruning.scan_matrix_pallas(q_lo, q_hi, p_min, p_max,
-                                      interpret=not _on_tpu(), **block_kw)
+    # interpret auto-selected inside the kernel wrapper: compiled on
+    # accelerator backends, interpreter on CPU-only hosts.
+    return pruning.scan_matrix_pallas(q_lo, q_hi, p_min, p_max, **block_kw)
 
 
 @jax.jit

@@ -15,6 +15,7 @@ sizes keep the working set (2*BQ*C + 2*BP*C + BQ*BP floats) well under VMEM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,13 +47,27 @@ def _kernel(qlo_ref, qhi_ref, pmin_ref, pmax_ref, out_ref, *, col_chunk):
     out_ref[...] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bp", "col_chunk",
-                                             "interpret"))
 def scan_matrix_pallas(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
                        p_max: jax.Array, bq: int = DEFAULT_BQ,
                        bp: int = DEFAULT_BP, col_chunk: int = 8,
-                       interpret: bool = True) -> jax.Array:
-    """(Q, C) x (P, C) -> (Q, P) float32 scan matrix."""
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """(Q, C) x (P, C) -> (Q, P) float32 scan matrix.
+
+    ``interpret=None`` auto-selects: the compiled kernel when JAX has an
+    accelerator backend (TPU/GPU), the Pallas interpreter on CPU-only hosts
+    (where the Mosaic pipeline is unavailable).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _scan_matrix_call(q_lo, q_hi, p_min, p_max, bq=bq, bp=bp,
+                             col_chunk=col_chunk, interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bp", "col_chunk",
+                                             "interpret"))
+def _scan_matrix_call(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                      p_max: jax.Array, bq: int, bp: int, col_chunk: int,
+                      interpret: bool) -> jax.Array:
     Q, C = q_lo.shape
     P = p_min.shape[0]
     bq = min(bq, Q)

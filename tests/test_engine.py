@@ -187,6 +187,60 @@ def test_batched_cost_estimation_bit_identical(bench):
         assert batched.tolist() == singles
 
 
+@pytest.mark.parametrize("delta", [0, 25])
+def test_run_batched_matches_stepwise(bench, delta):
+    """run()'s block-serve fast path is bit-identical to stepping: same
+    costs, same reorg indices, same state sequence."""
+    data, stream = bench
+    gen = make_generator("qdtree")
+
+    def engine():
+        cfg = OreoConfig(alpha=40.0, seed=3, delta=delta,
+                         manager=lm.LayoutManagerConfig(target_partitions=16))
+        policy = OreoPolicy(data, build_default_layout(0, data, 16), gen, cfg)
+        return LayoutEngine(policy, InMemoryBackend(data), delta=cfg.delta)
+
+    fast = engine().run(stream)                       # auto-detected fast path
+    slow = engine().run(stream, batch_serve=False)    # forced stepwise
+    assert np.array_equal(fast.query_costs, slow.query_costs)
+    assert fast.reorg_indices == slow.reorg_indices
+    assert np.array_equal(fast.state_seq, slow.state_seq)
+
+
+def test_serve_block_matches_serve(bench):
+    data, stream = bench
+    backend = InMemoryBackend(data)
+    backend.register(build_default_layout(0, data, 16))
+    backend.activate(0)
+    qs = stream.queries[:64]
+    from repro.core.workload import stack_queries
+    q_lo, q_hi = stack_queries(qs)
+    block = backend.serve_block(q_lo, q_hi)
+    singles = np.array([backend.serve(q) for q in qs])
+    assert np.array_equal(block, singles)
+
+
+def test_estimate_costs_modes_bit_identical(bench):
+    """StateMatrix-backed estimates == the reference re-padding path ==
+    per-state eval_cost, for layouts with differing partition counts."""
+    data, stream = bench
+    gen = make_generator("qdtree")
+    lays = [build_default_layout(0, data, 16),
+            gen(1, data, stream.queries[:100], 16),
+            gen(2, data, stream.queries[200:300], 7)]
+    mem = InMemoryBackend(data)
+    ref = InMemoryBackend(data, compute="reference")
+    for b in (mem, ref):
+        for lay in lays:
+            b.register(lay)
+    for q in stream.queries[:50]:
+        got = mem.estimate_costs([0, 1, 2], q)
+        assert got == ref.estimate_costs([0, 1, 2], q)
+        for lay in lays:
+            assert got[lay.layout_id] == float(
+                layouts.eval_cost(lay.meta, q.lo, q.hi))
+
+
 def test_disk_backend_matches_in_memory_decisions(bench, tmp_path):
     """The same engine + policy over DiskBackend reorganizes real partition
     files in the background and serves the same logical costs."""
@@ -254,3 +308,49 @@ def test_maybe_evict_terminates_on_empty_sample():
 def test_layout_distance_empty_sample_is_infinite():
     assert layouts.layout_distance(np.zeros(0), np.zeros(0)) == np.inf
     assert layouts.layout_distance(np.array([0.5]), np.array([0.5])) == 0.0
+
+
+def _metadata_loop_reference(data, assignment, num_partitions, row_scale=1.0):
+    """The pre-vectorization per-partition loop, kept as the oracle."""
+    n, c = data.shape
+    mins = np.full((num_partitions, c), np.inf)
+    maxs = np.full((num_partitions, c), -np.inf)
+    rows = np.zeros(num_partitions, dtype=np.float64)
+    order = np.argsort(assignment, kind="stable")
+    sorted_assign = assignment[order]
+    bounds = np.searchsorted(sorted_assign, np.arange(num_partitions + 1))
+    for p in range(num_partitions):
+        lo, hi = bounds[p], bounds[p + 1]
+        if hi > lo:
+            chunk = data[order[lo:hi]]
+            mins[p] = chunk.min(axis=0)
+            maxs[p] = chunk.max(axis=0)
+            rows[p] = (hi - lo) * row_scale
+    return layouts.PartitionMetadata(mins=mins, maxs=maxs, rows=rows)
+
+
+@pytest.mark.parametrize("case", ["dense", "empty_partitions", "out_of_range",
+                                  "no_rows", "scaled"])
+def test_metadata_from_assignment_matches_loop_reference(case):
+    """The reduceat vectorization is exactly equal to the per-partition loop,
+    including empty partitions and out-of-range assignments."""
+    rng = np.random.default_rng(sum(ord(ch) for ch in case))
+    n, c, p = 3000, 5, 16
+    data = rng.uniform(-10, 10, (n, c))
+    scale = 1.0
+    if case == "dense":
+        assignment = rng.integers(0, p, n)
+    elif case == "empty_partitions":
+        assignment = rng.integers(0, 3, n) * 5      # only partitions 0, 5, 10
+    elif case == "out_of_range":
+        assignment = rng.integers(-2, p + 4, n)     # some rows out of range
+    elif case == "no_rows":
+        data, assignment = data[:0], rng.integers(0, p, 0)
+    else:
+        assignment, scale = rng.integers(0, p, n), 137.5
+    got = layouts.metadata_from_assignment(data, assignment, p,
+                                           row_scale=scale)
+    want = _metadata_loop_reference(data, assignment, p, row_scale=scale)
+    assert np.array_equal(got.mins, want.mins)
+    assert np.array_equal(got.maxs, want.maxs)
+    assert np.array_equal(got.rows, want.rows)

@@ -133,3 +133,113 @@ def test_rtbs_recency_bias(seed):
 def test_harmonic_bound_monotone():
     vals = [theorem_iv1_bound(n) for n in range(1, 30)]
     assert all(b2 >= b1 for b1, b2 in zip(vals, vals[1:]))
+
+
+# ---------------------------------------------------------------------------
+# StateMatrix metadata plane invariants
+# ---------------------------------------------------------------------------
+
+def _tiny_meta(rng: np.random.Generator, p: int, c: int = 4):
+    data = rng.uniform(0, 1, (max(4 * p, 16), c))
+    assignment = rng.integers(0, p, len(data))
+    return layouts.metadata_from_assignment(data, assignment, p)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 999),
+       ops=st.lists(st.sampled_from(["reg", "dereg", "rereg"]),
+                    min_size=1, max_size=40))
+def test_state_matrix_equals_from_scratch_rebuild(seed, ops):
+    """After any register/deregister sequence, the incrementally-maintained
+    plane is indistinguishable from one rebuilt from scratch: same metadata,
+    bit-identical estimates, both equal to the reference evaluation."""
+    from repro.engine import StateMatrix
+    rng = np.random.default_rng(seed)
+    sm = StateMatrix()
+    live = {}
+    next_id = 0
+    for op in ops:
+        if op == "reg" or not live:
+            meta = _tiny_meta(rng, int(rng.integers(1, 12)))
+            sm.register(next_id, meta)
+            live[next_id] = meta
+            next_id += 1
+        elif op == "dereg":
+            victim = int(rng.choice(sorted(live)))
+            sm.deregister(victim)
+            del live[victim]
+        else:   # re-register an existing id with fresh metadata
+            victim = int(rng.choice(sorted(live)))
+            meta = _tiny_meta(rng, int(rng.integers(1, 12)))
+            sm.register(victim, meta)
+            live[victim] = meta
+    assert sorted(sm.state_ids) == sorted(live)
+    rebuilt = StateMatrix()
+    for sid in sm.state_ids:                # same slot order as the plane
+        rebuilt.register(sid, live[sid])
+    for sid in sm.state_ids:
+        for attr in ("mins", "maxs", "rows"):
+            assert np.array_equal(getattr(sm.metadata(sid), attr),
+                                  getattr(live[sid], attr))
+    lo = np.full(4, -np.inf)
+    hi = np.full(4, np.inf)
+    col = int(rng.integers(4))
+    lo[col], hi[col] = 0.2, 0.6
+    metas_in_slot_order = [live[sid] for sid in sm.state_ids]
+    want = layouts.eval_cost_states(metas_in_slot_order, lo, hi)
+    assert np.array_equal(sm.estimate(lo, hi), want)
+    assert sm.estimate_costs(sm.state_ids, lo, hi) == \
+        rebuilt.estimate_costs(sm.state_ids, lo, hi)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 99), extra_queries=st.integers(1, 80))
+def test_layout_manager_cost_vector_cache_invalidates(seed, extra_queries):
+    """Cached LayoutManager cost vectors always equal a from-scratch
+    computation over the *current* R-TBS sample, before and after the
+    sample changes."""
+    from repro.core import build_default_layout, make_generator
+    from repro.core import layout_manager as lm
+    from repro.core import workload as wl
+    rng = np.random.default_rng(seed)
+    data = rng.uniform(0, 100, size=(1500, 4))
+
+    def query():
+        lo = np.full(4, -np.inf)
+        hi = np.full(4, np.inf)
+        col = int(rng.integers(4))
+        lo[col] = rng.uniform(0, 80)
+        hi[col] = lo[col] + rng.uniform(1, 20)
+        return wl.Query(lo=lo, hi=hi)
+
+    init = build_default_layout(0, data, 4)
+    mgr = lm.LayoutManager(data, make_generator("qdtree"), init,
+                           lm.LayoutManagerConfig(rtbs_size=8), seed=seed)
+    for i in range(1, 4):
+        mgr.store[i] = build_default_layout(i, data, 4, sort_col=i % 4)
+    for _ in range(5):
+        mgr.rtbs.add(query())
+
+    def fresh_vectors():
+        qs = mgr.rtbs.sample()
+        q_lo, q_hi = wl.stack_queries(qs)
+        return {i: layouts.cost_vector(lay.meta, q_lo, q_hi)
+                for i, lay in mgr.store.items()}
+
+    first = mgr._cost_vectors(mgr.store)
+    want = fresh_vectors()
+    assert all(np.array_equal(first[i], want[i]) for i in mgr.store)
+    assert mgr._cv_cache          # vectors of stored layouts were cached
+
+    version_before = mgr.rtbs.version
+    for _ in range(extra_queries):
+        mgr.rtbs.add(query())
+    second = mgr._cost_vectors(mgr.store)
+    want = fresh_vectors()
+    assert all(np.array_equal(second[i], want[i]) for i in mgr.store)
+    if mgr.rtbs.version != version_before:
+        # sample changed -> cache was rebuilt, not reused
+        assert not any(second[i] is first[i] for i in mgr.store)
+    else:
+        # sample unchanged -> cached arrays reused verbatim
+        assert all(second[i] is first[i] for i in mgr.store)
