@@ -1,7 +1,11 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench bench-smoke quickstart install
+# Benchmark output lands inside the workspace (gitignored) so CI can pick
+# it up as an artifact and feed the regression gate on any runner.
+BENCH_DIR ?= .bench
+
+.PHONY: test lint bench bench-smoke bench-gate bench-fleet-smoke quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -9,11 +13,22 @@ install:
 test:
 	$(PYTHON) -m pytest -x -q
 
+lint:
+	ruff check src tests benchmarks
+
 bench:
 	$(PYTHON) benchmarks/run.py --quick
 
 bench-smoke:
-	$(PYTHON) benchmarks/bench_decision_loop.py --smoke --out /tmp/bench_decision_loop_smoke.json
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_decision_loop.py --smoke --out $(BENCH_DIR)/bench_decision_loop_smoke.json
+
+bench-gate: bench-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_decision_loop_smoke.json --baseline BENCH_decision_loop.json
+
+bench-fleet-smoke:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_fleet.py --smoke --out $(BENCH_DIR)/BENCH_fleet.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

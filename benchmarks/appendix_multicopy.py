@@ -7,8 +7,6 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
 from benchmarks import common
 from repro.core import build_default_layout, layouts, make_generator
 from repro.core.extensions import MultiCopyDUMTS

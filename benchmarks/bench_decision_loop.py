@@ -86,9 +86,9 @@ def bench_config(data: np.ndarray, queries: List[wl.Query], num_states: int,
     rows = []
 
     def fresh_engine(compute: str) -> LayoutEngine:
-        space = [layouts.Layout(layout_id=l.layout_id, name=l.name,
-                                technique=l.technique, meta=l.meta)
-                 for l in state_space]
+        space = [layouts.Layout(layout_id=lay.layout_id, name=lay.name,
+                                technique=lay.technique, meta=lay.meta)
+                 for lay in state_space]
         return LayoutEngine(ScoringPolicy(space), InMemoryBackend(
             data, compute=compute))
 
@@ -132,8 +132,12 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     if args.smoke:
-        n_rows, n_queries, reps = 2_000, 50, 1
-        sweep = [(2, 16)]
+        # Sized for the CI regression gate: big enough that the
+        # StateMatrix-vs-reference speedup ratio is stable run to run
+        # (see benchmarks/check_regression.py), small enough to finish in
+        # a few seconds on any runner.
+        n_rows, n_queries, reps = 8_000, 400, 5
+        sweep = [(4, 64)]
     elif args.quick:
         n_rows, n_queries, reps = 40_000, 1_000, 3
         sweep = [(8, 256)]

@@ -1,0 +1,149 @@
+"""Fleet benchmark: drift scenarios x reorg schedulers.
+
+Runs a multi-tenant :class:`repro.engine.FleetEngine` — every tenant an
+independent OREO-policy :class:`LayoutEngine` over its own table — through
+each registered workload-drift scenario (``repro.core.workload.
+DRIFT_SCENARIOS``: sudden shift, gradual drift, cyclic/diurnal, flash crowd,
+template churn) under each reorganization scheduler, and reports the
+combined query + reorg cost, swap deferrals, and the engine-aggregated
+wall-clock breakdown (decide / reorg / serve seconds — no re-instrumentation
+needed, the per-tenant ``RunResult`` carries them).
+
+Writes ``BENCH_fleet.json``.  ``--smoke`` is the CI configuration: all five
+scenarios x two schedulers at tiny sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import OreoConfig, build_default_layout, make_generator
+from repro.core import layout_manager as lm
+from repro.core.workload import make_drift_scenario
+from repro.engine import (FleetEngine, InMemoryBackend, KConcurrentScheduler,
+                          LayoutEngine, OreoPolicy, TokenBucketScheduler,
+                          UnlimitedScheduler)
+
+SCENARIOS = ["sudden_shift", "gradual_drift", "cyclic_diurnal",
+             "flash_crowd", "template_churn"]
+
+
+def make_tenant_data(num_tenants: int, rows: int, cols: int,
+                     seed: int) -> Dict[str, np.ndarray]:
+    return {f"t{t}": np.random.default_rng(seed + t).uniform(
+        0, 100, size=(rows, cols)) for t in range(num_tenants)}
+
+
+def tenant_engine(data: np.ndarray, alpha: float, delta: int,
+                  partitions: int, seed: int = 0) -> LayoutEngine:
+    cfg = OreoConfig(
+        alpha=alpha, seed=seed, delta=delta,
+        manager=lm.LayoutManagerConfig(target_partitions=partitions,
+                                       window_size=80, gen_every=40))
+    policy = OreoPolicy(data, build_default_layout(0, data, partitions),
+                        make_generator("qdtree"), cfg)
+    return LayoutEngine(policy, InMemoryBackend(data), delta=cfg.delta)
+
+
+def bench_cell(scenario: str, scheduler_factory, tenant_data, col_lo, col_hi,
+               queries_per_tenant: int, alpha: float, delta: int,
+               partitions: int, seed: int) -> Dict:
+    fs = make_drift_scenario(scenario, col_lo, col_hi,
+                             num_tenants=len(tenant_data),
+                             queries_per_tenant=queries_per_tenant, seed=seed)
+    fleet = FleetEngine(
+        {tid: tenant_engine(tenant_data[tid], alpha, delta, partitions)
+         for tid in fs.tenant_ids},
+        scheduler_factory())
+    t0 = time.perf_counter()
+    res = fleet.run(fs)
+    wall = time.perf_counter() - t0
+    return {
+        "scenario": scenario,
+        "scheduler": res.scheduler,
+        "tenants": len(fs.tenant_ids),
+        "events": res.ticks,
+        "total_cost": round(res.total_cost, 3),
+        "query_cost": round(res.total_query_cost, 3),
+        "reorg_cost": round(res.total_reorg_cost, 3),
+        "reorgs": res.num_reorgs,
+        "swaps_deferred": res.swaps_deferred,
+        "deferred_ticks": res.deferred_ticks,
+        "scheduler_stats": res.scheduler_stats,
+        "events_per_sec": round(res.ticks / wall, 1),
+        "wall_seconds": round(wall, 3),
+        # engine-aggregated breakdown, straight off the per-tenant traces
+        "decide_seconds": round(res.decide_seconds, 3),
+        "reorg_seconds": round(res.reorg_seconds, 3),
+        "serve_seconds": round(res.serve_seconds, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: all scenarios x 2 schedulers, tiny")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        tenants, rows, cols, qpt = 3, 2_000, 6, 150
+        alpha, delta, partitions = 4.0, 10, 8
+        schedulers = [
+            ("unlimited", UnlimitedScheduler),
+            ("k1", lambda: KConcurrentScheduler(1)),
+            ("bucket", lambda: TokenBucketScheduler(rate=0.005, capacity=1.0,
+                                                    initial=0.0)),
+        ]
+    else:
+        tenants, rows, cols, qpt = 4, 20_000, 8, 1_500
+        alpha, delta, partitions = 20.0, 10, 16
+        schedulers = [
+            ("unlimited", UnlimitedScheduler),
+            ("k1", lambda: KConcurrentScheduler(1)),
+            ("bucket", lambda: TokenBucketScheduler(rate=0.002,
+                                                    capacity=2.0)),
+        ]
+
+    tenant_data = make_tenant_data(tenants, rows, cols, seed=100)
+    col_lo = np.min([d.min(0) for d in tenant_data.values()], axis=0)
+    col_hi = np.max([d.max(0) for d in tenant_data.values()], axis=0)
+
+    results: List[Dict] = []
+    for scenario in SCENARIOS:
+        for label, factory in schedulers:
+            row = bench_cell(scenario, factory, tenant_data, col_lo, col_hi,
+                             qpt, alpha, delta, partitions, seed=7)
+            results.append(row)
+            print(f"{scenario:16s} x {label:10s} "
+                  f"total={row['total_cost']:9.1f} "
+                  f"(reorgs={row['reorgs']:3d}, "
+                  f"deferred={row['swaps_deferred']:3d} swaps/"
+                  f"{row['deferred_ticks']:4d} ticks) "
+                  f"{row['events_per_sec']:8.0f} ev/s", flush=True)
+
+    payload = {
+        "benchmark": "fleet",
+        "units": "combined query+reorg cost (fraction-of-table + alpha "
+                 "per reorg); events/sec wall-clock",
+        "config": {
+            "tenants": tenants, "rows": rows, "columns": cols,
+            "queries_per_tenant": qpt, "alpha": alpha, "delta": delta,
+            "partitions": partitions, "smoke": bool(args.smoke),
+            "platform": platform.platform(), "numpy": np.__version__,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Benchmark-regression gate: fail CI when the decision-loop speedup slips.
+
+Compares a fresh ``bench_decision_loop.py --smoke`` run against the
+checked-in ``BENCH_decision_loop.json`` baseline.  Raw queries/sec are not
+comparable across machines, so the gate checks **speedup ratios** — the
+StateMatrix (and batched-run) throughput divided by the reference
+re-padding path, both measured in the same process on the same runner.
+That ratio is what PR 2 bought and what this gate protects: a slowdown
+isolated to the optimized path drags the ratio down wherever it runs.
+
+Fails (exit 1) if, for any config x mode present in both files, the fresh
+speedup falls below ``(1 - tolerance)`` of the baseline speedup.  The
+baseline's ``smoke_baseline`` section (recorded with the same smoke
+configuration, minimum of several runs) is preferred; configs from the
+full-sweep ``speedup_vs_reference`` section are used as a fallback for any
+key the smoke baseline does not cover.
+
+Usage:
+    python benchmarks/check_regression.py \\
+        --fresh .bench/bench_decision_loop_smoke.json \\
+        --baseline BENCH_decision_loop.json [--tolerance 0.30]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_speedups(payload: dict, prefer_smoke: bool) -> dict:
+    """{config_key: {mode: speedup}} from a bench_decision_loop payload."""
+    out = {}
+    if not prefer_smoke:
+        out.update(payload.get("speedup_vs_reference", {}))
+    else:
+        smoke = payload.get("smoke_baseline", {})
+        out.update(payload.get("speedup_vs_reference", {}))
+        out.update(smoke.get("speedup_vs_reference", {}))   # smoke wins
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="JSON written by bench_decision_loop.py --smoke")
+    ap.add_argument("--baseline", required=True,
+                    help="checked-in BENCH_decision_loop.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOLERANCE",
+                                                 "0.30")),
+                    help="allowed fractional slowdown (default 0.30)")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = load_speedups(json.load(f), prefer_smoke=False)
+    with open(args.baseline) as f:
+        base = load_speedups(json.load(f), prefer_smoke=True)
+
+    shared = sorted(set(fresh) & set(base))
+    if not shared:
+        print(f"regression gate: no overlapping configs between "
+              f"{args.fresh} ({sorted(fresh)}) and "
+              f"{args.baseline} ({sorted(base)})", file=sys.stderr)
+        return 1
+
+    failed = False
+    for key in shared:
+        for mode in sorted(set(fresh[key]) & set(base[key])):
+            got, want = fresh[key][mode], base[key][mode]
+            floor = (1.0 - args.tolerance) * want
+            verdict = "ok" if got >= floor else "REGRESSION"
+            print(f"  {key}/{mode}: speedup x{got:.2f} "
+                  f"(baseline x{want:.2f}, floor x{floor:.2f}) {verdict}")
+            if got < floor:
+                failed = True
+    if failed:
+        print(f"regression gate FAILED: speedup vs reference dropped more "
+              f"than {args.tolerance:.0%} below the checked-in baseline "
+              f"({args.baseline})", file=sys.stderr)
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

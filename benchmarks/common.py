@@ -1,9 +1,8 @@
 """Shared benchmark scaffolding: datasets, workloads, method runners."""
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -9,7 +9,6 @@ The measured ratio feeds the cost model's alpha (config default 80).
 from __future__ import annotations
 
 import tempfile
-import time
 from typing import List
 
 import numpy as np

@@ -9,7 +9,7 @@ from the assignment; ``decode_*``/``long_*`` lower ``serve_step`` instead of
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,7 +12,7 @@
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -104,7 +104,6 @@ def two_state_asymmetric(costs_a: Sequence[float], costs_b: Sequence[float],
 def offline_two_state(costs_a: Sequence[float], costs_b: Sequence[float],
                       alpha_ab: float, alpha_ba: float) -> float:
     """Optimal offline two-state cost via dynamic programming."""
-    inf = float("inf")
     best = [0.0, alpha_ab]     # start in state 0 by convention
     for ca, cb in zip(costs_a, costs_b):
         best = [

@@ -28,6 +28,16 @@ class RunResult:
     reorg_indices: List[int]                # query idx at which reorgs charged
     state_seq: np.ndarray                   # (T,) decision state per query
     info: dict = dataclasses.field(default_factory=dict)
+    # Wall-clock breakdown of the run, aggregated by the engine over every
+    # query stepped: decision layer / physical reorganization (prepare +
+    # swap) / serving.  Zero for traces not produced by an engine.
+    decide_seconds: float = 0.0
+    reorg_seconds: float = 0.0
+    serve_seconds: float = 0.0
+
+    @property
+    def wall_seconds(self) -> float:
+        return self.decide_seconds + self.reorg_seconds + self.serve_seconds
 
     @property
     def total_query_cost(self) -> float:

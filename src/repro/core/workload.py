@@ -5,11 +5,19 @@ queries from one query *template* for an arbitrary amount of time before
 switching to another random template (§VI-A2).  Templates focus on a small set
 of columns with a target selectivity, mimicking TPC-H/TPC-DS template families
 and the Telemetry workload (time-range + collector filters).
+
+Beyond the single-stream generator, this module hosts the **drift-scenario
+registry** (:data:`DRIFT_SCENARIOS`): named generators of interleaved
+multi-tenant :class:`FleetStream`\\ s — sudden template shift, gradual
+interpolated drift, cyclic/diurnal rotation, flash-crowd burst, and template
+churn — the workload conditions a multi-tenant fleet
+(:class:`repro.engine.FleetEngine`) is exercised under.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -132,6 +140,272 @@ def generate_workload(templates: Sequence[QueryTemplate],
             current = nxt
     return WorkloadStream(queries=queries, segments=segments,
                           templates=list(templates))
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant drift scenarios
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetStream:
+    """An interleaved multi-tenant workload with per-tenant ground truth.
+
+    ``events`` is the fleet-level stream of ``(tenant_id, query)`` pairs in
+    arrival order; ``per_tenant`` holds each tenant's queries *in the same
+    relative order* as an ordinary :class:`WorkloadStream` (with its own
+    segmentation), so a tenant's standalone run over ``per_tenant[tid]`` is
+    the golden reference for its fleet trace.
+    """
+
+    scenario: str
+    events: List[Tuple[str, Query]]
+    per_tenant: Dict[str, WorkloadStream]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[Tuple[str, Query]]:
+        return iter(self.events)
+
+    @property
+    def tenant_ids(self) -> List[str]:
+        return list(self.per_tenant)
+
+
+#: name -> scenario generator; populated by :func:`drift_scenario` below.
+DRIFT_SCENARIOS: Dict[str, Callable[..., FleetStream]] = {}
+
+
+def drift_scenario(name: str):
+    """Register a named multi-tenant drift-scenario generator."""
+    def deco(fn):
+        DRIFT_SCENARIOS[name] = fn
+        fn.scenario_name = name
+        return fn
+    return deco
+
+
+def make_drift_scenario(name: str, col_lo: np.ndarray, col_hi: np.ndarray,
+                        num_tenants: int = 4, queries_per_tenant: int = 2000,
+                        seed: int = 0, **kwargs) -> FleetStream:
+    """Instantiate a registered drift scenario by name."""
+    if name not in DRIFT_SCENARIOS:
+        raise KeyError(f"unknown drift scenario {name!r}; "
+                       f"known: {sorted(DRIFT_SCENARIOS)}")
+    return DRIFT_SCENARIOS[name](
+        col_lo=col_lo, col_hi=col_hi, num_tenants=num_tenants,
+        queries_per_tenant=queries_per_tenant, seed=seed, **kwargs)
+
+
+def _tenant_ids(num_tenants: int) -> List[str]:
+    return [f"t{t}" for t in range(num_tenants)]
+
+
+def _stream_from_plan(plan: Sequence[Tuple[QueryTemplate, int]],
+                      templates: Sequence[QueryTemplate],
+                      col_lo: np.ndarray, col_hi: np.ndarray,
+                      rng: np.random.Generator) -> WorkloadStream:
+    """Materialize a (template, segment_length) plan into a WorkloadStream."""
+    queries: List[Query] = []
+    segments: List[Tuple[int, int, int]] = []
+    start = 0
+    for tmpl, length in plan:
+        for _ in range(length):
+            queries.append(tmpl.sample(rng, col_lo, col_hi))
+        if length > 0:
+            segments.append((start, start + length, tmpl.template_id))
+        start += length
+    return WorkloadStream(queries=queries, segments=segments,
+                          templates=list(templates))
+
+
+def interleave_streams(per_tenant: Dict[str, WorkloadStream],
+                       weight_fn: Optional[Callable[[str, int], float]] = None,
+                       ) -> List[Tuple[str, Query]]:
+    """Deterministic weighted-fair interleave of per-tenant streams.
+
+    Smooth weighted round-robin: each pick adds every live tenant's current
+    weight to its credit, emits the highest-credit tenant's next query, and
+    debits that tenant by the total live weight.  ``weight_fn(tenant_id,
+    next_index)`` may vary over a tenant's progress (e.g. a flash-crowd
+    burst); the default is uniform round-robin.  Per-tenant query order is
+    always preserved.
+    """
+    tids = sorted(per_tenant)
+    cursors = {tid: 0 for tid in tids}
+    credits = {tid: 0.0 for tid in tids}
+    events: List[Tuple[str, Query]] = []
+    total = sum(len(s) for s in per_tenant.values())
+    for _ in range(total):
+        live = [t for t in tids if cursors[t] < len(per_tenant[t].queries)]
+        weights = {t: (weight_fn(t, cursors[t]) if weight_fn else 1.0)
+                   for t in live}
+        for t in live:
+            credits[t] += weights[t]
+        pick = max(live, key=lambda t: credits[t])
+        credits[pick] -= sum(weights.values())
+        events.append((pick, per_tenant[pick].queries[cursors[pick]]))
+        cursors[pick] += 1
+    return events
+
+
+def _scenario_rngs(seed: int, num_tenants: int) -> List[np.random.Generator]:
+    """One independent generator per tenant (tenants are separate tables)."""
+    root = np.random.SeedSequence(seed)
+    return [np.random.default_rng(s) for s in root.spawn(num_tenants)]
+
+
+@drift_scenario("sudden_shift")
+def sudden_shift(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 4,
+                 queries_per_tenant: int = 2000, seed: int = 0,
+                 ) -> FleetStream:
+    """Each tenant abruptly switches template once, at a staggered point.
+
+    The motivating condition of the paper: a hard workload change that a
+    static layout cannot follow.  Shift points are spread across tenants so
+    the fleet sees a rolling wave of reorganization pressure.
+    """
+    per_tenant: Dict[str, WorkloadStream] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(2, col_lo.shape[0], rng)
+        shift = int(queries_per_tenant * rng.uniform(0.35, 0.65))
+        plan = [(tmpls[0], shift),
+                (tmpls[1], queries_per_tenant - shift)]
+        per_tenant[f"t{t}"] = _stream_from_plan(plan, tmpls, col_lo, col_hi,
+                                                rng)
+    return FleetStream("sudden_shift", interleave_streams(per_tenant),
+                       per_tenant)
+
+
+@drift_scenario("gradual_drift")
+def gradual_drift(col_lo: np.ndarray, col_hi: np.ndarray,
+                  num_tenants: int = 4, queries_per_tenant: int = 2000,
+                  seed: int = 0) -> FleetStream:
+    """Smoothly interpolated drift from one template family to another.
+
+    Query ``j`` of a tenant samples from the target template with
+    probability ``j / (T - 1)``, so the mixture slides from 100% source to
+    100% target with no hard boundary — the regime where switch-point
+    detectors (and static layouts) degrade gracefully or not at all.
+    """
+    per_tenant: Dict[str, WorkloadStream] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(2, col_lo.shape[0], rng)
+        total = queries_per_tenant
+        queries: List[Query] = []
+        for j in range(total):
+            frac = j / max(total - 1, 1)
+            tmpl = tmpls[1] if rng.uniform() < frac else tmpls[0]
+            queries.append(tmpl.sample(rng, col_lo, col_hi))
+        # Ground-truth segmentation is approximate by construction: label
+        # the source-dominant and target-dominant halves.
+        segments = [(0, total // 2, tmpls[0].template_id),
+                    (total // 2, total, tmpls[1].template_id)]
+        per_tenant[f"t{t}"] = WorkloadStream(queries=queries,
+                                             segments=segments,
+                                             templates=list(tmpls))
+    return FleetStream("gradual_drift", interleave_streams(per_tenant),
+                       per_tenant)
+
+
+@drift_scenario("cyclic_diurnal")
+def cyclic_diurnal(col_lo: np.ndarray, col_hi: np.ndarray,
+                   num_tenants: int = 4, queries_per_tenant: int = 2000,
+                   seed: int = 0, num_phases: int = 3, cycles: int = 4,
+                   ) -> FleetStream:
+    """Diurnal rotation: templates recur in a fixed cycle, phase-shifted
+    per tenant (tenants "peak" at different times of day).
+
+    Recurring templates reward keeping previously-generated layouts in the
+    state space instead of regenerating them every period.
+    """
+    per_tenant: Dict[str, WorkloadStream] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(num_phases, col_lo.shape[0], rng)
+        block = max(queries_per_tenant // (num_phases * cycles), 1)
+        phase0 = t % num_phases                     # per-tenant phase shift
+        plan: List[Tuple[QueryTemplate, int]] = []
+        emitted = 0
+        k = 0
+        while emitted < queries_per_tenant:
+            tmpl = tmpls[(phase0 + k) % num_phases]
+            length = min(block, queries_per_tenant - emitted)
+            plan.append((tmpl, length))
+            emitted += length
+            k += 1
+        per_tenant[f"t{t}"] = _stream_from_plan(plan, tmpls, col_lo, col_hi,
+                                                rng)
+    return FleetStream("cyclic_diurnal", interleave_streams(per_tenant),
+                       per_tenant)
+
+
+@drift_scenario("flash_crowd")
+def flash_crowd(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 4,
+                queries_per_tenant: int = 2000, seed: int = 0,
+                burst_tenant: int = 0, burst_frac: float = 0.15,
+                burst_rate: float = 4.0) -> FleetStream:
+    """One tenant's traffic spikes: a hot template takes over *and* its
+    event rate multiplies for the burst window.
+
+    During the burst the victim tenant emits ``burst_rate`` events for every
+    one of each other tenant's, concentrating both serving load and
+    reorganization pressure at the same fleet ticks — the worst case for a
+    shared reorg budget.
+    """
+    burst_tid = f"t{burst_tenant % num_tenants}"
+    per_tenant: Dict[str, WorkloadStream] = {}
+    burst_range: Tuple[int, int] = (0, 0)
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tid = f"t{t}"
+        tmpls = make_templates(2, col_lo.shape[0], rng)
+        if tid == burst_tid:
+            burst_len = int(queries_per_tenant * burst_frac)
+            start = int(queries_per_tenant * 0.4)
+            plan = [(tmpls[0], start),
+                    (tmpls[1], burst_len),            # the flash crowd
+                    (tmpls[0], queries_per_tenant - start - burst_len)]
+            burst_range = (start, start + burst_len)
+        else:
+            plan = [(tmpls[0], queries_per_tenant)]
+        per_tenant[tid] = _stream_from_plan(plan, tmpls, col_lo, col_hi, rng)
+
+    def weight(tid: str, next_index: int) -> float:
+        if tid == burst_tid and burst_range[0] <= next_index < burst_range[1]:
+            return burst_rate
+        return 1.0
+
+    return FleetStream("flash_crowd",
+                       interleave_streams(per_tenant, weight_fn=weight),
+                       per_tenant)
+
+
+@drift_scenario("template_churn")
+def template_churn(col_lo: np.ndarray, col_hi: np.ndarray,
+                   num_tenants: int = 4, queries_per_tenant: int = 2000,
+                   seed: int = 0, num_segments: int = 6) -> FleetStream:
+    """Templates enter and leave: every segment brings a never-seen-before
+    template and retires the previous one.
+
+    No template recurs, so cached layouts go stale continuously — the
+    stress test for candidate generation and ε-admission (state churn), as
+    opposed to switching among a stable set.
+    """
+    per_tenant: Dict[str, WorkloadStream] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        c = col_lo.shape[0]
+        segs = max(num_segments, 1)
+        cuts = np.linspace(0, queries_per_tenant, segs + 1).astype(int)
+        tmpls: List[QueryTemplate] = []
+        plan: List[Tuple[QueryTemplate, int]] = []
+        for s in range(segs):
+            fresh = make_templates(1, c, rng)[0]
+            fresh = dataclasses.replace(fresh, template_id=s)
+            tmpls.append(fresh)
+            plan.append((fresh, int(cuts[s + 1] - cuts[s])))
+        per_tenant[f"t{t}"] = _stream_from_plan(plan, tmpls, col_lo, col_hi,
+                                                rng)
+    return FleetStream("template_churn", interleave_streams(per_tenant),
+                       per_tenant)
 
 
 def queried_column_histogram(queries: Sequence[Query],

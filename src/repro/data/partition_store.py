@@ -13,7 +13,7 @@ import json
 import os
 import shutil
 import time
-from typing import List, Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

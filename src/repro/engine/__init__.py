@@ -24,18 +24,30 @@ Layers:
   plane every registry-backed backend scores queries against, with
   pluggable compute (:func:`repro.engine.compute.scan_matrix`: ``numpy``
   exact / ``pallas`` kernel).
+* :class:`FleetEngine` — multi-tenant layer: N engines over one
+  interleaved ``(tenant_id, query)`` stream, physical reorganization
+  arbitrated by a :class:`ReorgScheduler`
+  (:class:`UnlimitedScheduler` / :class:`KConcurrentScheduler` /
+  :class:`TokenBucketScheduler`), with drift scenarios in
+  :data:`repro.core.workload.DRIFT_SCENARIOS`.
 """
 from repro.engine.backends import DiskBackend, InMemoryBackend, StorageBackend
 from repro.engine.compute import scan_matrix
 from repro.engine.core import LayoutEngine, StepResult
+from repro.engine.fleet import FleetEngine, FleetResult, FleetStepResult
 from repro.engine.policies import (Decision, GreedyPolicy, MTSOptimalPolicy,
                                    OfflineOptimalPolicy, OreoPolicy, Policy,
                                    RegretPolicy, StaticPolicy)
+from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
+                                    TokenBucketScheduler, UnlimitedScheduler)
 from repro.engine.state_matrix import StateMatrix
 
 __all__ = [
-    "Decision", "DiskBackend", "GreedyPolicy", "InMemoryBackend",
-    "LayoutEngine", "MTSOptimalPolicy", "OfflineOptimalPolicy", "OreoPolicy",
-    "Policy", "RegretPolicy", "StateMatrix", "StaticPolicy", "StepResult",
-    "StorageBackend", "scan_matrix",
+    "Decision", "DiskBackend", "FleetEngine", "FleetResult",
+    "FleetStepResult", "GreedyPolicy", "InMemoryBackend",
+    "KConcurrentScheduler", "LayoutEngine", "MTSOptimalPolicy",
+    "OfflineOptimalPolicy", "OreoPolicy", "Policy", "RegretPolicy",
+    "ReorgScheduler", "StateMatrix", "StaticPolicy", "StepResult",
+    "StorageBackend", "TokenBucketScheduler", "UnlimitedScheduler",
+    "scan_matrix",
 ]

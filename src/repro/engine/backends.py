@@ -164,6 +164,11 @@ class InMemoryBackend(_RegistryMixin):
         # In-memory reorganization is instantaneous; nothing to overlap.
         pass
 
+    @property
+    def pending_states(self) -> List[int]:
+        """State ids with in-flight physical work (always empty here)."""
+        return []
+
     def activate(self, state_id: int) -> None:
         layout = self._layouts[state_id]
         meta = layout.materialize(self.data)
@@ -327,6 +332,24 @@ class DiskBackend(_RegistryMixin):
     def serving_state(self) -> Optional[int]:
         return (None if self._serving_layout is None
                 else self._serving_layout.layout_id)
+
+    @property
+    def pending_states(self) -> List[int]:
+        """State ids with an in-flight (prepared) background rewrite."""
+        return sorted(self._pending)
+
+    def materializing(self, state_id: int) -> bool:
+        """True while ``state_id``'s background rewrite has not finished.
+
+        Used by fleet schedulers to observe in-flight physical work; a
+        state that was never prepared, or whose write completed, is False.
+        """
+        pending = self._pending.get(state_id)
+        if pending is None:
+            return False
+        _, _, entry = pending
+        with self._lock:
+            return not entry["done"]
 
     def serve(self, query: wl.Query) -> float:
         _, stats = self._serving_store.scan(query)

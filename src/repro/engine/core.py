@@ -50,12 +50,22 @@ class LayoutEngine:
     """
 
     def __init__(self, policy: Policy, backend: StorageBackend,
-                 delta: int = 0, name: Optional[str] = None):
+                 delta: int = 0, name: Optional[str] = None,
+                 governor: Optional[object] = None):
         self.policy = policy
         self.backend = backend
         self.delta = delta
         self.name = name or policy.name
         self.alpha = policy.alpha
+        #: Optional reorg governor (see :mod:`repro.engine.scheduler`): an
+        #: object with ``on_charge(engine, index, state_id) -> bool`` (may
+        #: physical work start now?) and ``may_apply(engine, due_index,
+        #: state_id) -> bool`` (may the due swap take effect now?).  None —
+        #: the standalone default — starts work at charge time and applies
+        #: every swap the moment it is due, i.e. the paper's single-tenant
+        #: Δ-delay semantics.  A governor can only *defer* physical work,
+        #: never advance it, so per-tenant Δ-delay bounds are preserved.
+        self.governor = governor
         self._started = False
         self._index = 0
         self._query_costs: List[float] = []
@@ -64,6 +74,9 @@ class LayoutEngine:
         # (effective_idx, sid); appended in index order, drained from the
         # front — a deque keeps the drain O(1) per swap.
         self._pending_swaps: Deque[Tuple[int, int]] = collections.deque()
+        self._decide_seconds = 0.0
+        self._reorg_seconds = 0.0
+        self._serve_seconds = 0.0
 
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -83,16 +96,29 @@ class LayoutEngine:
         """
         if decision.reorg:
             self._reorg_indices.append(i)
-            self.backend.prepare(decision.state)
+            if (self.governor is None
+                    or self.governor.on_charge(self, i, decision.state)):
+                self.backend.prepare(decision.state)
             self._pending_swaps.append((i + self.delta, decision.state))
 
     def _apply_due_swaps(self, i: int) -> None:
         """Apply any swap whose background reorganization has finished; a
-        state evicted while its swap was in flight is skipped."""
+        state evicted while its swap was in flight is skipped.  Swaps apply
+        strictly in charge order: a due swap the governor keeps deferred
+        blocks everything queued behind it."""
         while self._pending_swaps and self._pending_swaps[0][0] <= i:
-            _, sid = self._pending_swaps.popleft()
+            due, sid = self._pending_swaps[0]
+            if (self.governor is not None
+                    and not self.governor.may_apply(self, due, sid)):
+                break
+            self._pending_swaps.popleft()
             if self.backend.has(sid):
                 self.backend.activate(sid)
+
+    @property
+    def pending_swaps(self) -> Tuple[Tuple[int, int], ...]:
+        """Charged-but-not-yet-applied swaps as (due_index, state_id)."""
+        return tuple(self._pending_swaps)
 
     def step(self, query: wl.Query) -> StepResult:
         """Advance the online loop by one query."""
@@ -109,6 +135,9 @@ class LayoutEngine:
         self._query_costs.append(query_cost)
         self._state_seq.append(decision.state)
         self._index += 1
+        self._decide_seconds += t1 - t0
+        self._reorg_seconds += t2 - t1
+        self._serve_seconds += t3 - t2
         return StepResult(
             index=i,
             query=query,
@@ -133,6 +162,9 @@ class LayoutEngine:
             reorg_indices=list(self._reorg_indices),
             state_seq=np.asarray(self._state_seq, dtype=np.int64),
             info=dict(self.policy.info()),
+            decide_seconds=self._decide_seconds,
+            reorg_seconds=self._reorg_seconds,
+            serve_seconds=self._serve_seconds,
         )
 
     def run(self, stream: wl.WorkloadStream, name: Optional[str] = None,
@@ -165,19 +197,30 @@ class LayoutEngine:
         block = 0
         for k, query in enumerate(queries):
             i = self._index
+            t0 = time.perf_counter()
             decision = self.policy.decide(i, query, self.backend)
+            t1 = time.perf_counter()
             self._charge_reorg(i, decision)
+            flush = 0.0
             if self._pending_swaps and self._pending_swaps[0][0] <= i:
                 # Flush the open serve block before the swap changes the
                 # serving layout (a step serves *after* applying due swaps,
                 # so query k itself belongs to the next block).
                 if k > block:
+                    ts = time.perf_counter()
                     costs[block:k] = self.backend.serve_block(
                         q_lo[block:k], q_hi[block:k])
+                    flush = time.perf_counter() - ts
                 block = k
                 self._apply_due_swaps(i)
+            t2 = time.perf_counter()
             self._state_seq.append(decision.state)
             self._index += 1
+            self._decide_seconds += t1 - t0
+            self._reorg_seconds += t2 - t1 - flush
+            self._serve_seconds += flush
+        ts = time.perf_counter()
         costs[block:] = self.backend.serve_block(q_lo[block:], q_hi[block:])
+        self._serve_seconds += time.perf_counter() - ts
         self._query_costs.extend(float(c) for c in costs)
         return self.result(name)

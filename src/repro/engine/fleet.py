@@ -1,0 +1,273 @@
+"""Multi-tenant fleet: many LayoutEngines, one reorganization budget.
+
+A :class:`FleetEngine` drives N independent tenants — each a fully-formed
+:class:`repro.engine.LayoutEngine` with its own policy, backend, α and
+Δ-delay — over a single interleaved stream of ``(tenant_id, query)``
+events, the shape of traffic a warehouse actually sees.  Decisions stay
+strictly per-tenant; what is *shared* is physical reorganization work,
+arbitrated by a pluggable :class:`repro.engine.scheduler.ReorgScheduler`.
+
+The contract with each tenant's Δ-delay semantics (paper §VI-D5):
+
+* Reorganization **charges** are untouched.  A tenant's policy runs
+  exactly as it would standalone, and α is charged at decision time, so
+  ``reorg_indices`` and ``state_seq`` are identical under *every*
+  scheduler (decisions are metadata-only and never read the serving
+  layout).
+* Physical **swaps** may only be deferred, never advanced: a swap lands at
+  the first of the tenant's own steps whose index is ≥ its due index
+  (charge index + Δ) *and* whose work the scheduler has granted.  Under
+  :class:`~repro.engine.scheduler.UnlimitedScheduler` every grant is
+  immediate and each tenant's full trace — query costs included — is
+  bit-identical to running its engine alone.
+* Swaps apply in charge order per tenant; a deferred swap blocks the
+  tenant's later swaps, not other tenants'.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, Iterable, List, Mapping, Optional, Tuple
+
+from repro.core import oreo as _oreo
+from repro.core import workload as wl
+
+from .core import LayoutEngine, StepResult
+from .scheduler import ReorgScheduler, UnlimitedScheduler
+
+
+@dataclasses.dataclass
+class FleetStepResult:
+    """One interleaved event's pass through the fleet."""
+
+    tick: int                   # fleet clock (1-based event counter)
+    tenant_id: str
+    step: StepResult            # the tenant-local step observation
+    swap_deferred: bool         # a due swap was kept waiting at this step
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Aggregate trace of a fleet run: per-tenant RunResults + fleet totals."""
+
+    name: str
+    scheduler: str
+    per_tenant: Dict[str, _oreo.RunResult]
+    ticks: int
+    #: Distinct swaps the scheduler kept waiting past their due step.
+    swaps_deferred: int
+    #: Tenant steps served under a stale layout while a due swap waited —
+    #: one deferred swap accrues a tick per step until granted, so this
+    #: measures wait *time*, not how many swaps were affected.
+    deferred_ticks: int
+    scheduler_stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_query_cost(self) -> float:
+        return sum(r.total_query_cost for r in self.per_tenant.values())
+
+    @property
+    def total_reorg_cost(self) -> float:
+        return sum(r.total_reorg_cost for r in self.per_tenant.values())
+
+    @property
+    def total_cost(self) -> float:
+        return self.total_query_cost + self.total_reorg_cost
+
+    @property
+    def num_reorgs(self) -> int:
+        return sum(r.num_reorgs for r in self.per_tenant.values())
+
+    @property
+    def decide_seconds(self) -> float:
+        return sum(r.decide_seconds for r in self.per_tenant.values())
+
+    @property
+    def reorg_seconds(self) -> float:
+        return sum(r.reorg_seconds for r in self.per_tenant.values())
+
+    @property
+    def serve_seconds(self) -> float:
+        return sum(r.serve_seconds for r in self.per_tenant.values())
+
+    @property
+    def wall_seconds(self) -> float:
+        return self.decide_seconds + self.reorg_seconds + self.serve_seconds
+
+    def summary(self) -> str:
+        return (f"{self.name}[{self.scheduler}]: "
+                f"total={self.total_cost:.1f} "
+                f"(query={self.total_query_cost:.1f}, "
+                f"reorg={self.total_reorg_cost:.1f}, "
+                f"moves={self.num_reorgs}, "
+                f"deferred={self.swaps_deferred} "
+                f"over {self.deferred_ticks} ticks) "
+                f"tenants={len(self.per_tenant)} ticks={self.ticks}")
+
+
+class _TenantGovernor:
+    """Bridges one tenant's engine hooks to the fleet's shared scheduler."""
+
+    __slots__ = ("fleet", "tenant_id")
+
+    def __init__(self, fleet: "FleetEngine", tenant_id: str):
+        self.fleet = fleet
+        self.tenant_id = tenant_id
+
+    def on_charge(self, engine: LayoutEngine, index: int,
+                  state_id: int) -> bool:
+        return self.fleet._on_charge(self.tenant_id, engine, state_id)
+
+    def may_apply(self, engine: LayoutEngine, due_index: int,
+                  state_id: int) -> bool:
+        return self.fleet._may_apply(self.tenant_id, engine, state_id)
+
+
+class FleetEngine:
+    """Drives N tenant engines over one interleaved query stream.
+
+    ``tenants`` maps tenant id → a *fresh* :class:`LayoutEngine` (not yet
+    started, no governor of its own); ``scheduler`` arbitrates physical
+    reorganization work fleet-wide (default: unlimited, i.e. no
+    contention).  Feed events with :meth:`step` or :meth:`run`, read the
+    aggregate trace with :meth:`result` — per-tenant traces are ordinary
+    :class:`repro.core.oreo.RunResult` objects.
+    """
+
+    def __init__(self, tenants: Mapping[str, LayoutEngine],
+                 scheduler: Optional[ReorgScheduler] = None,
+                 name: str = "fleet"):
+        if not tenants:
+            raise ValueError("a fleet needs at least one tenant")
+        self.name = name
+        self.scheduler = scheduler or UnlimitedScheduler()
+        self._tenants: Dict[str, LayoutEngine] = dict(tenants)
+        for tid, engine in self._tenants.items():
+            if engine.governor is not None:
+                raise ValueError(f"tenant {tid!r}: engine already governed")
+            if engine._started:
+                raise ValueError(f"tenant {tid!r}: engine already started")
+            engine.governor = _TenantGovernor(self, tid)
+        self._tick = 0
+        self.swaps_deferred = 0
+        self.deferred_ticks = 0
+        # Whether each tenant's *front* pending swap has already been
+        # counted in swaps_deferred; reset whenever a front swap resolves.
+        self._front_deferred: Dict[str, bool] = {
+            tid: False for tid in tenants}
+        # Charged swaps whose physical work awaits a scheduler grant, in
+        # fleet-wide charge order; per-tenant FIFO is enforced so a
+        # tenant's later swap never overtakes its earlier one.
+        self._waiting: Deque[Tuple[str, int]] = collections.deque()
+        self._waiting_count: Dict[str, int] = {
+            tid: 0 for tid in self._tenants}
+        # Work granted (prepare issued) but swap not yet applied.
+        self._granted: Dict[str, Deque[int]] = {
+            tid: collections.deque() for tid in self._tenants}
+
+    @property
+    def tenant_ids(self) -> List[str]:
+        return list(self._tenants)
+
+    def tenant(self, tenant_id: str) -> LayoutEngine:
+        return self._tenants[tenant_id]
+
+    # ------------------------------------------------------------------
+    # Governor callbacks (one per tenant, shared budget)
+    # ------------------------------------------------------------------
+    def _on_charge(self, tid: str, engine: LayoutEngine,
+                   state_id: int) -> bool:
+        """A tenant charged a reorg; True lets its physical work start now."""
+        if (self._waiting_count[tid] == 0
+                and self.scheduler.try_acquire(tid)):
+            self._granted[tid].append(state_id)
+            return True
+        self._waiting.append((tid, state_id))
+        self._waiting_count[tid] += 1
+        return False
+
+    def _may_apply(self, tid: str, engine: LayoutEngine,
+                   state_id: int) -> bool:
+        """May this tenant's front (due) swap take effect at this step?"""
+        granted = self._granted[tid]
+        if granted and granted[0] == state_id:
+            granted.popleft()
+            self.scheduler.release(tid)
+            self._front_deferred[tid] = False
+            return True
+        if not engine.backend.has(state_id):
+            # Evicted while waiting for a grant: there is no physical work
+            # to do and the engine skips the activation; just forget it.
+            try:
+                self._waiting.remove((tid, state_id))
+                self._waiting_count[tid] -= 1
+            except ValueError:
+                pass
+            self._front_deferred[tid] = False
+            return True
+        self.deferred_ticks += 1
+        if not self._front_deferred[tid]:
+            self._front_deferred[tid] = True
+            self.swaps_deferred += 1
+        return False
+
+    def _pump(self) -> None:
+        """Grant waiting physical work, FIFO, as the scheduler allows."""
+        if not self._waiting:
+            return
+        blocked: set = set()
+        keep: Deque[Tuple[str, int]] = collections.deque()
+        while self._waiting:
+            tid, sid = self._waiting.popleft()
+            engine = self._tenants[tid]
+            if not engine.backend.has(sid):
+                self._waiting_count[tid] -= 1
+                continue
+            if tid in blocked or not self.scheduler.try_acquire(tid):
+                blocked.add(tid)
+                keep.append((tid, sid))
+                continue
+            self._waiting_count[tid] -= 1
+            self._granted[tid].append(sid)
+            engine.backend.prepare(sid)
+        self._waiting = keep
+
+    # ------------------------------------------------------------------
+    # Driving the fleet
+    # ------------------------------------------------------------------
+    def step(self, tenant_id: str, query: wl.Query) -> FleetStepResult:
+        """Advance the fleet by one interleaved event."""
+        engine = self._tenants[tenant_id]
+        self._tick += 1
+        self.scheduler.tick(self._tick)
+        self._pump()
+        before = self.deferred_ticks
+        step = engine.step(query)
+        return FleetStepResult(tick=self._tick, tenant_id=tenant_id,
+                               step=step,
+                               swap_deferred=self.deferred_ticks > before)
+
+    def run(self, events: Iterable[Tuple[str, wl.Query]],
+            name: Optional[str] = None) -> FleetResult:
+        """Step every ``(tenant_id, query)`` event and return the trace.
+
+        Accepts any iterable of events, including a
+        :class:`repro.core.workload.FleetStream`.
+        """
+        for tenant_id, query in events:
+            self.step(tenant_id, query)
+        return self.result(name)
+
+    def result(self, name: Optional[str] = None) -> FleetResult:
+        stats = (self.scheduler.stats()
+                 if callable(getattr(self.scheduler, "stats", None)) else {})
+        return FleetResult(
+            name=name or self.name,
+            scheduler=self.scheduler.name,
+            per_tenant={tid: engine.result()
+                        for tid, engine in self._tenants.items()},
+            ticks=self._tick,
+            swaps_deferred=self.swaps_deferred,
+            deferred_ticks=self.deferred_ticks,
+            scheduler_stats=stats,
+        )

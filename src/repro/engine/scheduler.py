@@ -1,0 +1,166 @@
+"""Shared reorganization-work schedulers for multi-tenant fleets.
+
+A warehouse serving many tables cannot rewrite all of them at once: physical
+reorganization competes for a shared maintenance budget (cf. Snowflake's
+incremental reclustering).  A :class:`ReorgScheduler` is the fleet-wide
+arbiter of that budget: each charged reorganization must *acquire* one unit
+of physical work before its background materialization may start, and
+*releases* it when the swap takes effect.
+
+Deferral never changes what a tenant is charged — the decision layer runs
+unmodified and reorganization cost is incurred at decision time exactly as
+in the single-tenant loop — it only delays when the physical swap lands,
+and never before the tenant's own Δ-delay has elapsed.
+
+Schedulers are deliberately tiny state machines driven by the fleet clock
+(one tick per interleaved query event):
+
+* :class:`UnlimitedScheduler` — every acquire granted immediately; a fleet
+  under it is bit-identical, per tenant, to running each engine alone.
+* :class:`KConcurrentScheduler` — at most ``k`` reorganizations in flight
+  (acquired and not yet swapped) across all tenants.
+* :class:`TokenBucketScheduler` — a refillable budget: each reorganization
+  costs one token, ``rate`` tokens drip in per tick up to ``capacity``.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class ReorgScheduler(Protocol):
+    """Fleet-wide admission control for physical reorganization work.
+
+    * :meth:`tick` advances the scheduler's clock; called once per fleet
+      event before any acquire attempt at that tick.
+    * :meth:`try_acquire` asks to start one unit of physical work for a
+      tenant; True grants it.  The fleet guarantees per-tenant FIFO: it
+      never requests a grant for a tenant's later swap while an earlier
+      one is still waiting.
+    * :meth:`release` returns a granted unit once the swap has taken
+      effect (or the target state was evicted and the swap skipped).
+    """
+
+    name: str
+
+    def tick(self, now: int) -> None: ...
+
+    def try_acquire(self, tenant_id: str) -> bool: ...
+
+    def release(self, tenant_id: str) -> None: ...
+
+
+class _StatsMixin:
+    """Grant/denial counters shared by the concrete schedulers.
+
+    ``grants`` counts distinct granted work units.  ``denied_attempts``
+    counts *acquire attempts* that were refused — the fleet re-polls every
+    waiting swap each tick, so this scales with time spent waiting, not
+    with distinct swaps; for per-swap deferral counts see
+    :attr:`repro.engine.FleetResult.swaps_deferred`.
+    """
+
+    grants: int
+    denied_attempts: int
+
+    def _init_stats(self) -> None:
+        self.grants = 0
+        self.denied_attempts = 0
+
+    def _count(self, granted: bool) -> bool:
+        if granted:
+            self.grants += 1
+        else:
+            self.denied_attempts += 1
+        return granted
+
+    def stats(self) -> dict:
+        return {"scheduler": self.name, "grants": self.grants,
+                "denied_attempts": self.denied_attempts}
+
+
+class UnlimitedScheduler(_StatsMixin):
+    """No contention: physical work starts the moment it is charged.
+
+    The golden scheduler — a fleet under it reproduces each tenant's
+    standalone trace bit for bit.
+    """
+
+    name = "unlimited"
+
+    def __init__(self) -> None:
+        self._init_stats()
+
+    def tick(self, now: int) -> None:
+        pass
+
+    def try_acquire(self, tenant_id: str) -> bool:
+        return self._count(True)
+
+    def release(self, tenant_id: str) -> None:
+        pass
+
+
+class KConcurrentScheduler(_StatsMixin):
+    """At most ``k`` reorganizations in flight fleet-wide.
+
+    A reorganization is in flight from the tick its work is granted until
+    the tick its swap takes effect; with ``k=1`` the fleet serializes all
+    physical reorganization onto one maintenance worker.
+    """
+
+    def __init__(self, k: int = 1):
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        self.k = k
+        self.name = f"k{k}"
+        self.in_flight = 0
+        self._init_stats()
+
+    def tick(self, now: int) -> None:
+        pass
+
+    def try_acquire(self, tenant_id: str) -> bool:
+        if self.in_flight < self.k:
+            self.in_flight += 1
+            return self._count(True)
+        return self._count(False)
+
+    def release(self, tenant_id: str) -> None:
+        if self.in_flight > 0:
+            self.in_flight -= 1
+
+
+class TokenBucketScheduler(_StatsMixin):
+    """Token-bucket reorganization budget.
+
+    ``rate`` tokens accrue per fleet tick up to ``capacity``; each granted
+    reorganization consumes one whole token.  ``rate=0`` with an initial
+    burst models a fixed budget; fractional rates model "one reorg every
+    1/rate queries fleet-wide".
+    """
+
+    def __init__(self, rate: float, capacity: float,
+                 initial: float | None = None):
+        if rate < 0 or capacity < 0:
+            raise ValueError("rate and capacity must be >= 0")
+        self.rate = float(rate)
+        self.capacity = float(capacity)
+        self.tokens = float(capacity if initial is None else initial)
+        self.name = f"bucket{rate:g}x{capacity:g}"
+        self._now = 0
+        self._init_stats()
+
+    def tick(self, now: int) -> None:
+        elapsed = max(now - self._now, 0)
+        self._now = now
+        self.tokens = min(self.capacity, self.tokens + self.rate * elapsed)
+
+    def try_acquire(self, tenant_id: str) -> bool:
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return self._count(True)
+        return self._count(False)
+
+    def release(self, tenant_id: str) -> None:
+        pass

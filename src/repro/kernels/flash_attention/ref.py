@@ -1,7 +1,6 @@
 """Pure-jnp oracle for the flash-attention kernel (exact softmax attention)."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

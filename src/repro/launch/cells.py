@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch
+from repro.configs.base import SHAPES
 from repro.train.optimizer import OptimizerConfig
 from repro.train.train_loop import TrainOptions
 

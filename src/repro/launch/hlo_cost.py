@@ -20,9 +20,8 @@ All shapes in the post-SPMD module are PER-DEVICE.
 """
 from __future__ import annotations
 
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

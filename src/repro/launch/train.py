@@ -12,14 +12,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_arch
 from repro.data import pipeline as dpipe

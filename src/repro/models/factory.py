@@ -7,7 +7,7 @@ jitted/lowered uniformly for every (arch x shape) dry-run cell.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +80,6 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig
     B, T = shape.global_batch, shape.seq_len
     i32 = jnp.int32
     bf16 = L.DEFAULT_DTYPE
-    bspec = P("batch")
 
     def tok(shape_):
         return jax.ShapeDtypeStruct(shape_, i32)

@@ -13,7 +13,6 @@ and to this implementation elsewhere.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -7,7 +7,7 @@ nemotron-4-340b fit (EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -146,7 +146,8 @@ def test_baseline_policies_share_engine_loop(bench):
     data, stream = bench
     gen = make_generator("qdtree")
     alpha = 40.0
-    init = lambda: build_default_layout(0, data, 16)
+    def init():
+        return build_default_layout(0, data, 16)
 
     def run(policy):
         return LayoutEngine(policy, InMemoryBackend(data)).run(stream)

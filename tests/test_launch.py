@@ -1,7 +1,6 @@
 """Launch-layer tests: logical-spec resolution + HLO cost parser."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

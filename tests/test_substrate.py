@@ -1,6 +1,5 @@
 """Training substrate tests: optimizer, checkpoint/restart (bit-exact
 resume), fault tolerance, gradient compression, OREO data pipeline."""
-import os
 import tempfile
 
 import jax
@@ -26,7 +25,6 @@ def tiny_setup():
     options = TrainOptions(microbatches=1)
     step = jax.jit(build_train_step(model, opt_cfg, options))
     state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg, options)
-    rng = np.random.default_rng(0)
 
     def batch_fn(i):
         r = np.random.default_rng(i)              # deterministic in step

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import (CostModel, DynamicUMTS, OreoConfig, OreoRunner,
+from repro.core import (DynamicUMTS, OreoConfig, OreoRunner,
                         baselines, build_default_layout, build_qdtree_layout,
                         build_zorder_layout, generate_workload, layouts,
                         make_generator, make_templates, stack_queries,
