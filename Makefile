@@ -5,7 +5,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 # it up as an artifact and feed the regression gate on any runner.
 BENCH_DIR ?= .bench
 
-.PHONY: test lint bench bench-smoke bench-gate bench-fleet-smoke quickstart install
+.PHONY: test test-kernels lint bench bench-full bench-smoke bench-gate \
+        bench-fleet-smoke bench-fleet-gate quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -13,11 +14,24 @@ install:
 test:
 	$(PYTHON) -m pytest -x -q
 
+# Pallas interpret-mode parity suite (pruning / zorder / flash_attention /
+# fleet_scan kernels vs their jnp oracles) — its own CI job so kernel
+# breakage is attributed distinctly from engine breakage.
+test-kernels:
+	$(PYTHON) -m pytest tests/test_kernels.py -q
+
 lint:
 	ruff check src tests benchmarks
 
 bench:
 	$(PYTHON) benchmarks/run.py --quick
+
+# Full-size benchmark grids (nightly CI): decision loop sweep + fleet
+# scenario x scheduler x tenant-sweep grid, JSON into $(BENCH_DIR).
+bench-full:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_decision_loop.py --out $(BENCH_DIR)/BENCH_decision_loop.json
+	$(PYTHON) benchmarks/bench_fleet.py --out $(BENCH_DIR)/BENCH_fleet.json
 
 bench-smoke:
 	mkdir -p $(BENCH_DIR)
@@ -28,7 +42,10 @@ bench-gate: bench-smoke
 
 bench-fleet-smoke:
 	mkdir -p $(BENCH_DIR)
-	$(PYTHON) benchmarks/bench_fleet.py --smoke --out $(BENCH_DIR)/BENCH_fleet.json
+	$(PYTHON) benchmarks/bench_fleet.py --smoke --out $(BENCH_DIR)/bench_fleet_smoke.json
+
+bench-fleet-gate: bench-fleet-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_fleet_smoke.json --baseline BENCH_fleet.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

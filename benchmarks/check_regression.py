@@ -1,24 +1,34 @@
-"""Benchmark-regression gate: fail CI when the decision-loop speedup slips.
+"""Benchmark-regression gate: fail CI when a protected speedup slips.
 
-Compares a fresh ``bench_decision_loop.py --smoke`` run against the
-checked-in ``BENCH_decision_loop.json`` baseline.  Raw queries/sec are not
-comparable across machines, so the gate checks **speedup ratios** — the
-StateMatrix (and batched-run) throughput divided by the reference
-re-padding path, both measured in the same process on the same runner.
-That ratio is what PR 2 bought and what this gate protects: a slowdown
-isolated to the optimized path drags the ratio down wherever it runs.
+Compares a fresh smoke run against a checked-in baseline for both
+benchmark families:
 
-Fails (exit 1) if, for any config x mode present in both files, the fresh
-speedup falls below ``(1 - tolerance)`` of the baseline speedup.  The
-baseline's ``smoke_baseline`` section (recorded with the same smoke
-configuration, minimum of several runs) is preferred; configs from the
-full-sweep ``speedup_vs_reference`` section are used as a fallback for any
-key the smoke baseline does not cover.
+* ``bench_decision_loop.py --smoke`` vs ``BENCH_decision_loop.json`` —
+  the StateMatrix (and batched-run) throughput divided by the reference
+  re-padding path (section ``speedup_vs_reference``);
+* ``bench_fleet.py --smoke`` vs ``BENCH_fleet.json`` — the fleet
+  ``run_batched`` throughput divided by the stepwise loop on the tenant
+  sweep (section ``speedup_batched_vs_loop``).
+
+Raw queries/sec are not comparable across machines, so the gate checks
+**speedup ratios**, both sides measured in the same process on the same
+runner: a slowdown isolated to the optimized path drags the ratio down
+wherever it runs.
+
+Fails (exit 1) if, for any config x mode present in both files, the
+fresh speedup falls below ``(1 - tolerance)`` of the baseline speedup.
+Baselines prefer a dedicated smoke section (``smoke_baseline`` /
+``fleet_smoke``: same smoke configuration, minimum over several runs on
+the reference machine); top-level sections from the full sweep fill in
+any keys the smoke section does not cover.
 
 Usage:
     python benchmarks/check_regression.py \\
         --fresh .bench/bench_decision_loop_smoke.json \\
         --baseline BENCH_decision_loop.json [--tolerance 0.30]
+    python benchmarks/check_regression.py \\
+        --fresh .bench/bench_fleet_smoke.json \\
+        --baseline BENCH_fleet.json [--tolerance 0.30]
 """
 from __future__ import annotations
 
@@ -27,25 +37,34 @@ import json
 import os
 import sys
 
+#: Sections holding {config_key: {mode: speedup}} grids, per family.
+SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop")
+#: Dedicated smoke-baseline sections a checked-in file may carry; their
+#: grids win over the top-level (full-sweep) numbers for shared keys.
+SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke")
+
 
 def load_speedups(payload: dict, prefer_smoke: bool) -> dict:
-    """{config_key: {mode: speedup}} from a bench_decision_loop payload."""
+    """{config_key: {mode: speedup}} from a benchmark payload."""
     out = {}
-    if not prefer_smoke:
-        out.update(payload.get("speedup_vs_reference", {}))
-    else:
-        smoke = payload.get("smoke_baseline", {})
-        out.update(payload.get("speedup_vs_reference", {}))
-        out.update(smoke.get("speedup_vs_reference", {}))   # smoke wins
+    for section in SECTIONS:
+        out.update(payload.get(section, {}))
+    if prefer_smoke:
+        for smoke_name in SMOKE_SECTIONS:
+            smoke = payload.get(smoke_name, {})
+            for section in SECTIONS:
+                out.update(smoke.get(section, {}))     # smoke wins
     return out
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", required=True,
-                    help="JSON written by bench_decision_loop.py --smoke")
+                    help="JSON written by bench_decision_loop.py --smoke "
+                         "or bench_fleet.py --smoke")
     ap.add_argument("--baseline", required=True,
-                    help="checked-in BENCH_decision_loop.json")
+                    help="checked-in BENCH_decision_loop.json or "
+                         "BENCH_fleet.json")
     ap.add_argument("--tolerance", type=float,
                     default=float(os.environ.get("BENCH_GATE_TOLERANCE",
                                                  "0.30")),
@@ -75,7 +94,7 @@ def main() -> int:
             if got < floor:
                 failed = True
     if failed:
-        print(f"regression gate FAILED: speedup vs reference dropped more "
+        print(f"regression gate FAILED: speedup dropped more "
               f"than {args.tolerance:.0%} below the checked-in baseline "
               f"({args.baseline})", file=sys.stderr)
         return 1

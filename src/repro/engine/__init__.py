@@ -30,11 +30,18 @@ Layers:
   (:class:`UnlimitedScheduler` / :class:`KConcurrentScheduler` /
   :class:`TokenBucketScheduler`), with drift scenarios in
   :data:`repro.core.workload.DRIFT_SCENARIOS`.
+* :class:`FleetMatrix` — the packed multi-tenant decision plane behind
+  :meth:`FleetEngine.run_batched`: every tenant's StateMatrix stacked
+  into one ``(T, S_max, P_max, C)`` tensor family, maintained
+  incrementally and scored for all tenants in one fused pass
+  (:func:`repro.engine.compute.fleet_scan_matrix`: ``numpy`` exact /
+  ``pallas`` kernel) with traces bit-identical to the stepwise loop.
 """
 from repro.engine.backends import DiskBackend, InMemoryBackend, StorageBackend
-from repro.engine.compute import scan_matrix
+from repro.engine.compute import fleet_scan_matrix, scan_matrix
 from repro.engine.core import LayoutEngine, StepResult
 from repro.engine.fleet import FleetEngine, FleetResult, FleetStepResult
+from repro.engine.fleet_matrix import FleetMatrix
 from repro.engine.policies import (Decision, GreedyPolicy, MTSOptimalPolicy,
                                    OfflineOptimalPolicy, OreoPolicy, Policy,
                                    RegretPolicy, StaticPolicy)
@@ -43,11 +50,11 @@ from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
 from repro.engine.state_matrix import StateMatrix
 
 __all__ = [
-    "Decision", "DiskBackend", "FleetEngine", "FleetResult",
+    "Decision", "DiskBackend", "FleetEngine", "FleetMatrix", "FleetResult",
     "FleetStepResult", "GreedyPolicy", "InMemoryBackend",
     "KConcurrentScheduler", "LayoutEngine", "MTSOptimalPolicy",
     "OfflineOptimalPolicy", "OreoPolicy", "Policy", "RegretPolicy",
     "ReorgScheduler", "StateMatrix", "StaticPolicy", "StepResult",
     "StorageBackend", "TokenBucketScheduler", "UnlimitedScheduler",
-    "scan_matrix",
+    "fleet_scan_matrix", "scan_matrix",
 ]

@@ -93,6 +93,54 @@ class _RegistryMixin:
         self._matrix: Optional[StateMatrix] = (
             None if compute == "reference"
             else StateMatrix(compute_backend=compute))
+        self._primed: Optional[tuple] = None
+        self._primed_idx: Optional[tuple] = None
+
+    def prime_estimates(self, query: wl.Query, version: int,
+                        costs: np.ndarray) -> None:
+        """Install precomputed per-slot costs for one upcoming query.
+
+        Used by the fleet's batched path: ``costs`` is the full per-slot
+        vector a :class:`repro.engine.fleet_matrix.FleetMatrix` computed in
+        its fused pass, ``version`` the :attr:`StateMatrix.version` it was
+        computed against.  :meth:`estimate_costs` consumes it only when the
+        *same* query object arrives while the plane is still at that
+        version — any state churn in between (a policy registering or
+        evicting candidates mid-decision) bumps the version and falls back
+        to the exact per-tenant path, so priming can never change results.
+        """
+        self._primed = (query, version, costs)
+
+    def _primed_costs(self, query: wl.Query) -> Optional[np.ndarray]:
+        primed = self._primed
+        if (primed is not None and primed[0] is query
+                and self._matrix is not None
+                and primed[1] == self._matrix.version):
+            return primed[2]
+        return None
+
+    def _primed_dict(self, costs: np.ndarray,
+                     state_ids: Sequence[int]) -> Dict[int, float]:
+        """id -> cost dict off a primed per-slot vector, vectorized.
+
+        Policies tend to pass the *same* id list object every query (or
+        fresh lists between state churn), so the slot-index gather is
+        cached on (ids object, plane version); ``ndarray.tolist`` yields
+        the same Python floats ``float(costs[slot])`` would.
+        """
+        m = self._matrix
+        cache = self._primed_idx
+        if (cache is not None and cache[0] is state_ids
+                and cache[1] == m.version):
+            ids, idx = cache[2], cache[3]
+        else:
+            ids = list(state_ids)
+            idx = np.fromiter((m.slot(s) for s in ids), dtype=np.intp,
+                              count=len(ids))
+            # Holding a reference to state_ids keeps its id() from being
+            # recycled while the cache entry is alive.
+            self._primed_idx = (state_ids, m.version, ids, idx)
+        return dict(zip(ids, costs.take(idx).tolist()))
 
     def register(self, layout: L.Layout) -> None:
         self._layouts[layout.layout_id] = layout
@@ -128,11 +176,34 @@ class _RegistryMixin:
         evaluating each state individually with ``eval_cost``.
         """
         if self._matrix is not None:
+            costs = self._primed_costs(query)
+            if costs is not None:
+                return self._primed_dict(costs, state_ids)
             return self._matrix.estimate_costs(state_ids, query.lo, query.hi)
+        return self._reference_costs(state_ids, query)
+
+    def _reference_costs(self, state_ids: Sequence[int],
+                         query: wl.Query) -> Dict[int, float]:
         ids = list(state_ids)
         metas = [self._layouts[s].meta for s in ids]
         costs = L.eval_cost_states(metas, query.lo, query.hi)
         return {s: float(c) for s, c in zip(ids, costs)}
+
+    def estimate_vector(self, query: wl.Query) -> np.ndarray:
+        """All registered states' c(s, q) as one float64 per-slot vector.
+
+        The array-native sibling of :meth:`estimate_costs` for policies
+        that are pure cost functions (argmin/threshold rules): no per-id
+        dict is materialized, slot order is :attr:`StateMatrix.state_ids`
+        (look slots up via ``state_matrix.slot``).  Consumes primed fleet
+        results when valid, so the values are bit-identical between the
+        stepwise and batched fleet paths.  Unavailable (AttributeError) in
+        ``reference`` compute mode.
+        """
+        costs = self._primed_costs(query)
+        if costs is not None:
+            return costs
+        return self._matrix.estimate(query.lo, query.hi)
 
 
 class InMemoryBackend(_RegistryMixin):
@@ -159,6 +230,7 @@ class InMemoryBackend(_RegistryMixin):
         self._serving: Optional[L.Layout] = None
         self._serving_cache: Optional[tuple] = None
         self._serve_memo: Optional[tuple] = None
+        self._shadow_slot: Optional[tuple] = None   # (plane version, slot)
 
     def prepare(self, state_id: int) -> None:
         # In-memory reorganization is instantaneous; nothing to overlap.
@@ -189,8 +261,12 @@ class InMemoryBackend(_RegistryMixin):
         m = self._matrix
         if m is None:
             return super().estimate_costs(state_ids, query)
-        costs = m.estimate(query.lo, query.hi)
-        out = {s: float(costs[m.slot(s)]) for s in state_ids}
+        costs = self._primed_costs(query)
+        if costs is None:
+            costs = m.estimate(query.lo, query.hi)
+            out = {s: float(costs[m.slot(s)]) for s in state_ids}
+        else:
+            out = self._primed_dict(costs, state_ids)
         if self._compute == "numpy" and self.SERVING_SHADOW in m:
             # The shadow serving state rode along in the same packed pass:
             # remember its score so serve() on this query is a lookup.
@@ -199,6 +275,44 @@ class InMemoryBackend(_RegistryMixin):
             self._serve_memo = (query,
                                 float(costs[m.slot(self.SERVING_SHADOW)]))
         return out
+
+    def estimate_vector(self, query: wl.Query) -> np.ndarray:
+        # Flat re-implementation of the mixin path plus the serve-score
+        # fusion of estimate_costs (numpy only), lean enough for the
+        # per-event hot loop.  The primed return skips the memo update:
+        # the fleet's batched driver installs the serve memo together with
+        # the primed costs (see FleetEngine.run_batched), and a layout
+        # activation between then and serving clears it either way.
+        m = self._matrix
+        primed = self._primed
+        version = m.version
+        if (primed is not None and primed[0] is query
+                and primed[1] == version):
+            return primed[2]
+        costs = m.estimate(query.lo, query.hi)
+        if self._compute == "numpy":
+            shadow = self.shadow_slot(version)
+            if shadow >= 0:
+                self._serve_memo = (query, float(costs[shadow]))
+        return costs
+
+    def shadow_slot(self, version: int) -> int:
+        """Packed slot of the serving-shadow state (-1 if absent), cached
+        per plane version."""
+        shadow = self._shadow_slot
+        if shadow is None or shadow[0] != version:
+            m = self._matrix
+            slot = (m.slot(self.SERVING_SHADOW)
+                    if self.SERVING_SHADOW in m else -1)
+            self._shadow_slot = (version, slot)
+            return slot
+        return shadow[1]
+
+    @property
+    def serve_primable(self) -> bool:
+        """True when a primed shadow-slot score is a valid serve memo —
+        i.e. :meth:`serve` charges exact metadata scores (numpy compute)."""
+        return self._compute == "numpy"
 
     def serve(self, query: wl.Query) -> float:
         if self._compute == "reference":

@@ -63,6 +63,70 @@ def masked_overlap(minsT: np.ndarray, maxsT: np.ndarray, q_lo: np.ndarray,
     return acc
 
 
+def fleet_masked_overlap(minsT: np.ndarray, maxsT: np.ndarray,
+                         q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
+    """Exact overlap test for a whole fleet, one query *per tenant*.
+
+    ``minsT``/``maxsT`` are ``(C, T, S, P)`` — the transposed packed fleet
+    plane, each column of one tenant a contiguous ``(S, P)`` block
+    compared against that tenant's scalar bound (long contiguous runs keep
+    numpy's fast comparison loops engaged) — and ``q_lo``/``q_hi`` are
+    ``(T, C)`` or ``(B, T, C)``: one bound pair per tenant row, optionally
+    for a block of B query *frames*.  Returns bool ``(T, S, P)`` (or
+    ``(B, T, S, P)``): tenant t's ``[..., t, :, :]`` slice is bit-identical
+    to :func:`masked_overlap` over t's own ``(C, S, P)`` plane with t's
+    query, because a column only ever adds ``min <= +inf`` /
+    ``max >= -inf`` terms (identically True) for tenants unbounded on it,
+    and columns unbounded for *every* tenant and frame are skipped
+    outright.
+    """
+    single = q_lo.ndim == 2
+    if single:
+        q_lo = q_lo[None]
+        q_hi = q_hi[None]
+    flat_hi = q_hi.reshape(-1, q_hi.shape[-1])
+    flat_lo = q_lo.reshape(-1, q_lo.shape[-1])
+    acc: Optional[np.ndarray] = None
+    for c in np.nonzero(~(flat_hi == np.inf).all(axis=0))[0].tolist():
+        term = minsT[c][None] <= q_hi[:, :, c, None, None]
+        acc = term if acc is None else np.logical_and(acc, term, out=acc)
+    for c in np.nonzero(~(flat_lo == -np.inf).all(axis=0))[0].tolist():
+        term = maxsT[c][None] >= q_lo[:, :, c, None, None]
+        acc = term if acc is None else np.logical_and(acc, term, out=acc)
+    if acc is None:     # every tenant fully unbounded: scan everything
+        acc = np.ones((q_lo.shape[0],) + minsT.shape[1:], dtype=bool)
+    return acc[0] if single else acc
+
+
+def fleet_scan_matrix(q_lo: np.ndarray, q_hi: np.ndarray, mins: np.ndarray,
+                      maxs: np.ndarray, backend: str = "numpy") -> np.ndarray:
+    """(T, C) per-tenant bounds x (T, N, C) packed bounds -> (T, N) bool.
+
+    The fused fleet-wide scan: every tenant's candidate states are scored
+    against that tenant's query in one pass.  ``numpy`` is exact float64;
+    ``pallas`` routes through :func:`repro.kernels.fleet_scan.fleet_scan.
+    scan_fleet_pallas` (float32 — see the module docstring caveat).
+    """
+    if backend == "numpy":
+        overlap = ((mins <= q_hi[:, None, :]) & (maxs >= q_lo[:, None, :]))
+        return overlap.all(axis=-1)
+    if backend == "pallas":
+        return _fleet_scan_pallas(q_lo, q_hi, mins, maxs)
+    raise ValueError(f"unknown compute backend: {backend!r} "
+                     f"(expected one of {BACKENDS})")
+
+
+def _fleet_scan_pallas(q_lo, q_hi, mins, maxs) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.kernels.fleet_scan import fleet_scan
+
+    out = fleet_scan.scan_fleet_pallas(
+        jnp.asarray(q_lo, jnp.float32), jnp.asarray(q_hi, jnp.float32),
+        jnp.asarray(mins, jnp.float32), jnp.asarray(maxs, jnp.float32))
+    return np.asarray(out) > 0.5
+
+
 def _scan_matrix_pallas(q_lo, q_hi, mins, maxs) -> np.ndarray:
     import jax.numpy as jnp
 

@@ -120,8 +120,11 @@ class LayoutEngine:
         """Charged-but-not-yet-applied swaps as (due_index, state_id)."""
         return tuple(self._pending_swaps)
 
-    def step(self, query: wl.Query) -> StepResult:
-        """Advance the online loop by one query."""
+    def _step_core(self, query: wl.Query):
+        """The decide/charge/swap/serve sequence shared by :meth:`step`
+        and :meth:`step_fast` — one implementation so the two entry points
+        can never drift apart (the fleet's loop/batched bit-identity
+        rests on that)."""
         self.start()
         i = self._index
         t0 = time.perf_counter()
@@ -135,9 +138,16 @@ class LayoutEngine:
         self._query_costs.append(query_cost)
         self._state_seq.append(decision.state)
         self._index += 1
-        self._decide_seconds += t1 - t0
-        self._reorg_seconds += t2 - t1
-        self._serve_seconds += t3 - t2
+        decide, reorg, serve = t1 - t0, t2 - t1, t3 - t2
+        self._decide_seconds += decide
+        self._reorg_seconds += reorg
+        self._serve_seconds += serve
+        return i, decision, query_cost, decide, reorg, serve
+
+    def step(self, query: wl.Query) -> StepResult:
+        """Advance the online loop by one query."""
+        i, decision, query_cost, decide, reorg, serve = \
+            self._step_core(query)
         return StepResult(
             index=i,
             query=query,
@@ -147,10 +157,21 @@ class LayoutEngine:
             reorg_charged=decision.reorg,
             states_added=decision.added,
             states_removed=decision.removed,
-            decide_seconds=t1 - t0,
-            reorg_seconds=t2 - t1,
-            serve_seconds=t3 - t2,
+            decide_seconds=decide,
+            reorg_seconds=reorg,
+            serve_seconds=serve,
         )
+
+    def step_fast(self, query: wl.Query) -> float:
+        """One query through the loop without materializing a StepResult.
+
+        Identical decide/charge/swap/serve sequence and identical trace to
+        :meth:`step` (same :meth:`_step_core`) — only the per-step
+        observation object is skipped, for batch drivers
+        (:meth:`repro.engine.FleetEngine.run_batched`) that read the trace
+        from :meth:`result` instead.  Returns the query cost.
+        """
+        return self._step_core(query)[2]
 
     # ------------------------------------------------------------------
     def result(self, name: Optional[str] = None) -> _oreo.RunResult:

@@ -33,6 +33,7 @@ from repro.core import oreo as _oreo
 from repro.core import workload as wl
 
 from .core import LayoutEngine, StepResult
+from .fleet_matrix import FleetMatrix
 from .scheduler import ReorgScheduler, UnlimitedScheduler
 
 
@@ -164,6 +165,10 @@ class FleetEngine:
         # Work granted (prepare issued) but swap not yet applied.
         self._granted: Dict[str, Deque[int]] = {
             tid: collections.deque() for tid in self._tenants}
+        # Packed decision plane for run_batched; built lazily on first use
+        # and maintained incrementally from then on (tenant attach/detach
+        # plus per-tenant state events), never rebuilt per tick.
+        self._fleet_matrix: Optional[FleetMatrix] = None
 
     @property
     def tenant_ids(self) -> List[str]:
@@ -171,6 +176,57 @@ class FleetEngine:
 
     def tenant(self, tenant_id: str) -> LayoutEngine:
         return self._tenants[tenant_id]
+
+    @property
+    def fleet_matrix(self) -> Optional[FleetMatrix]:
+        """The packed plane behind :meth:`run_batched` (None until used)."""
+        return self._fleet_matrix
+
+    # ------------------------------------------------------------------
+    # Dynamic tenant membership
+    # ------------------------------------------------------------------
+    def add_tenant(self, tenant_id: str, engine: LayoutEngine) -> None:
+        """Register a new tenant mid-flight.
+
+        Same contract as the constructor: a fresh, ungoverned engine.  If
+        the packed plane exists it picks the tenant up incrementally (one
+        new row), not via a rebuild.
+        """
+        if tenant_id in self._tenants:
+            raise ValueError(f"tenant {tenant_id!r} already registered")
+        if engine.governor is not None:
+            raise ValueError(f"tenant {tenant_id!r}: engine already governed")
+        if engine._started:
+            raise ValueError(f"tenant {tenant_id!r}: engine already started")
+        engine.governor = _TenantGovernor(self, tenant_id)
+        self._tenants[tenant_id] = engine
+        self._front_deferred[tenant_id] = False
+        self._waiting_count[tenant_id] = 0
+        self._granted[tenant_id] = collections.deque()
+        if self._fleet_matrix is not None:
+            self._fleet_matrix.attach(tenant_id,
+                                      self._batchable_matrix(tenant_id))
+
+    def remove_tenant(self, tenant_id: str) -> LayoutEngine:
+        """Deregister a tenant and return its (still usable) engine.
+
+        Queued physical work is dropped, any in-flight grants are released
+        back to the scheduler, and the packed plane sheds the tenant's row
+        incrementally.  The returned engine keeps its trace and reverts to
+        standalone (ungoverned) Δ-delay semantics; the fleet's
+        :meth:`result` no longer includes it.
+        """
+        engine = self._tenants.pop(tenant_id)
+        if self._waiting_count.pop(tenant_id):
+            self._waiting = collections.deque(
+                (t, s) for t, s in self._waiting if t != tenant_id)
+        for _ in self._granted.pop(tenant_id):
+            self.scheduler.release(tenant_id)
+        self._front_deferred.pop(tenant_id)
+        if self._fleet_matrix is not None:
+            self._fleet_matrix.detach(tenant_id)
+        engine.governor = None
+        return engine
 
     # ------------------------------------------------------------------
     # Governor callbacks (one per tenant, shared budget)
@@ -256,6 +312,123 @@ class FleetEngine:
         """
         for tenant_id, query in events:
             self.step(tenant_id, query)
+        return self.result(name)
+
+    # ------------------------------------------------------------------
+    # Batched fleet path over the packed FleetMatrix plane
+    # ------------------------------------------------------------------
+    def _batchable_matrix(self, tenant_id: str):
+        backend = self._tenants[tenant_id].backend
+        matrix = getattr(backend, "state_matrix", None)
+        if matrix is None or not callable(getattr(backend, "prime_estimates",
+                                                  None)):
+            raise ValueError(
+                f"tenant {tenant_id!r}: backend has no StateMatrix plane "
+                f"(compute='reference'?) — run_batched needs every tenant "
+                f"on a matrix-backed backend")
+        return matrix
+
+    def _ensure_fleet_matrix(self, compute: str) -> FleetMatrix:
+        if self._fleet_matrix is None:
+            fm = FleetMatrix(compute_backend=compute,
+                             tenant_capacity=len(self._tenants))
+            for tid in self._tenants:
+                fm.attach(tid, self._batchable_matrix(tid))
+            self._fleet_matrix = fm
+        else:
+            self._fleet_matrix.set_compute_backend(compute)
+        return self._fleet_matrix
+
+    def run_batched(self, events: Iterable[Tuple[str, wl.Query]],
+                    name: Optional[str] = None, compute: str = "numpy",
+                    frames_per_pass: Optional[int] = None) -> FleetResult:
+        """Run the fleet with per-frame fused cost evaluation.
+
+        The event stream is cut into *frames* — maximal runs of events with
+        pairwise-distinct tenants (a full round of T events under the
+        default round-robin interleave).  Each frame's candidate-state and
+        serve costs are evaluated for all tenants in one fused pass over
+        the packed :class:`FleetMatrix` plane and primed into each tenant's
+        backend; the events are then stepped **in exactly the original
+        order through the per-event machinery** (tick, pump, decide,
+        charge, Δ-delayed swap, serve — only the per-step observation
+        objects are skipped, like ``LayoutEngine.run``'s fast path), so
+        decide/charge/swap bookkeeping, scheduler grants and Δ-delay
+        semantics are untouched — under ``compute="numpy"`` the trace is
+        bit-identical to :meth:`run` under every scheduler.  A tenant that
+        mutates its state space mid-decision invalidates its primed frame
+        entry (plane-version check) and transparently falls back to the
+        exact per-tenant path for that event.
+
+        ``compute="pallas"`` routes the fused pass through the
+        :func:`repro.kernels.fleet_scan.fleet_scan.scan_fleet_pallas`
+        kernel (float32 — throughput on accelerators, not bit-identity).
+
+        ``frames_per_pass`` controls how many frames are scored per fused
+        pass (primed results a tenant invalidates by churning state are
+        simply recomputed exactly at consumption time); the default scales
+        with fleet size so one pass covers a few hundred events.
+        """
+        fm = self._ensure_fleet_matrix(compute)
+        scheduler = self.scheduler
+        events = list(events)
+        if frames_per_pass is None:
+            frames_per_pass = max(1, 256 // max(len(self._tenants), 1))
+        # Per-tenant hot-loop facts hoisted out of the inner loop; the
+        # serve memo is only primable where serve() charges exact metadata
+        # scores (see StorageBackend.serve_primable).
+        prep = {tid: (e, e.backend,
+                      bool(getattr(e.backend, "serve_primable", False)))
+                for tid, e in self._tenants.items()}
+        # Materialize every tenant's initial layout up front (idempotent;
+        # a first step would do it anyway) so even the first fused pass
+        # scores fully-populated planes instead of falling back.
+        for engine, _, _ in prep.values():
+            engine.start()
+        i, n = 0, len(events)
+        while i < n:
+            frames: List[List[Tuple[str, wl.Query]]] = []
+            while len(frames) < frames_per_pass and i < n:
+                j = i
+                seen = set()
+                while j < n and events[j][0] not in seen:
+                    seen.add(events[j][0])
+                    j += 1
+                frames.append(events[i:j])
+                i = j
+            primed = fm.estimate_frames(frames)
+            for frame, primes in zip(frames, primed):
+                for (tid, q), prime in zip(frame, primes):
+                    # Inlined per-event path: same tick/pump/step sequence
+                    # as :meth:`step`, minus the FleetStepResult observation
+                    # (the trace comes from :meth:`result`) — mirroring how
+                    # ``LayoutEngine.run``'s fast path relates to ``step``.
+                    engine, backend, primable = prep[tid]
+                    if prime is not None:
+                        # Direct install of (query, version, costs) — the
+                        # attribute form of backend.prime_estimates, minus
+                        # one method call on the hottest line of the fleet.
+                        # Stale costs are rejected at consumption time by
+                        # the version check in _primed_costs.
+                        backend._primed = (q, prime[0], prime[1])
+                        if (primable and prime[2] is not None
+                                and prime[0] == backend._matrix.version):
+                            # Shadow serve score from the same fused pass.
+                            # The version guard matters: a swap that landed
+                            # at an *earlier* event of this pass bumped the
+                            # plane version (activate registers the new
+                            # shadow), so a score computed pre-swap must
+                            # not be installed over the cleared memo — a
+                            # policy that never re-estimates would
+                            # otherwise serve it.  A swap landing at *this*
+                            # event clears the memo after installation
+                            # (activate() resets it), which stays safe.
+                            backend._serve_memo = (q, prime[2])
+                    self._tick += 1
+                    scheduler.tick(self._tick)
+                    if self._waiting:
+                        self._pump()
+                    engine.step_fast(q)
         return self.result(name)
 
     def result(self, name: Optional[str] = None) -> FleetResult:

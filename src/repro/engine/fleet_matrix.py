@@ -1,0 +1,458 @@
+"""FleetMatrix: one packed decision plane for every tenant in a fleet.
+
+:class:`repro.engine.state_matrix.StateMatrix` made the *single-table* hot
+path hardware-shaped: persistent packed zone maps, one fused op per query.
+A fleet of T tenants still pays T separate passes per round of traffic —
+one ``estimate`` per tenant engine, each a handful of numpy calls over tiny
+operands, so fleet throughput scales with Python call count instead of
+with hardware.  :class:`FleetMatrix` stacks every tenant's plane into one
+``(T, S_max, P_max, C)`` tensor family and scores *all* tenants' candidate
+states against *each tenant's own* current query in a single fused pass
+(:func:`repro.engine.compute.fleet_scan_matrix`: exact numpy, or the
+Pallas kernel :func:`repro.kernels.fleet_scan.fleet_scan.scan_fleet_pallas`).
+
+Maintenance is strictly incremental — the plane is **never rebuilt per
+tick**:
+
+* tenant attach/detach adds/removes one tenant *row* (swap-with-last, like
+  a StateMatrix slot);
+* per-tenant state add/evict events stream in through a listener installed
+  on each attached :class:`StateMatrix`
+  (:meth:`StateMatrix.add_listener`), replaying the same append /
+  swap-with-last slot algorithm, so fleet slots provably coincide with
+  each tenant's local slots;
+* capacity growth (more tenants, more states, wider partitions) is
+  geometric and amortized.
+
+Bit-identity contract (numpy path): for each tenant, the fused fleet scan
+restricted to that tenant's ``(n, P_cap_local)`` window equals the
+booleans its own plane would compute — padded slots carry ``[+inf, -inf]``
+bounds, and a column is only skipped when *every* tenant is unbounded on
+it, so the extra comparisons are identically True — and the final
+reduction is delegated to the tenant's own
+:meth:`StateMatrix.reduce_scanned` on that window.  Estimates are
+therefore bit-for-bit the ones the per-tenant loop computes, which is what
+lets :meth:`repro.engine.FleetEngine.run_batched` reproduce the stepwise
+fleet trace exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import layouts as L
+
+from . import compute
+from .state_matrix import StateMatrix
+
+
+class _TenantMirror:
+    """Listener bridging one tenant's StateMatrix events into the plane."""
+
+    __slots__ = ("fleet", "tenant_id")
+
+    def __init__(self, fleet: "FleetMatrix", tenant_id: str):
+        self.fleet = fleet
+        self.tenant_id = tenant_id
+
+    def on_register(self, state_id: int, meta: L.PartitionMetadata) -> None:
+        self.fleet._register(self.tenant_id, state_id, meta)
+
+    def on_deregister(self, state_id: int) -> None:
+        self.fleet._deregister(self.tenant_id, state_id)
+
+
+class FleetMatrix:
+    """Packed multi-tenant zone-map plane with incremental maintenance."""
+
+    def __init__(self, compute_backend: str = "numpy",
+                 tenant_capacity: int = 4, state_capacity: int = 8):
+        self.set_compute_backend(compute_backend)
+        self._tcap = max(int(tenant_capacity), 1)
+        self._scap = max(int(state_capacity), 1)
+        self._pcap = 0
+        self._c: Optional[int] = None
+        self._t = 0                                  # attached tenant rows
+        self._tids: List[str] = []                   # row -> tenant id
+        self._trows: Dict[str, int] = {}             # tenant id -> row
+        self._sms: Dict[str, StateMatrix] = {}       # attached local planes
+        self._mirrors: Dict[str, _TenantMirror] = {}
+        self._ids: Dict[str, List[int]] = {}         # tenant -> slot -> sid
+        self._slots: Dict[str, Dict[int, int]] = {}  # tenant -> sid -> slot
+        self._counts: Dict[str, List[int]] = {}      # tenant -> slot -> P_s
+        self._mins: Optional[np.ndarray] = None      # (T_cap,S_cap,P_cap,C)
+        self._maxs: Optional[np.ndarray] = None
+        # Transposed planes keep one column's bounds for one tenant — its
+        # whole (S_cap, P_cap) block — contiguous: the fused scan compares
+        # each such block against that tenant's scalar bound, and long
+        # contiguous runs are what numpy's fast comparison loops need.
+        # The scan covers full capacity (no slicing to the states in use):
+        # capacity slack is bounded by the geometric growth factor, and
+        # padded slots cost less than breaking the runs would.
+        self._minsT: Optional[np.ndarray] = None     # (C,T_cap,S_cap,P_cap)
+        self._maxsT: Optional[np.ndarray] = None
+        self._rows: Optional[np.ndarray] = None      # (T_cap,S_cap,P_cap)
+        self._totals: Optional[np.ndarray] = None    # (T_cap,S_cap) f64
+        #: Bumped on every plane mutation (any tenant's register/deregister,
+        #: attach, detach); consumers may key caches on it.
+        self.version = 0
+
+    def set_compute_backend(self, compute_backend: str) -> None:
+        """Switch the fused-scan compute path (validated; tensors shared)."""
+        if compute_backend not in compute.BACKENDS:
+            raise ValueError(f"unknown compute backend: {compute_backend!r}")
+        self.compute_backend = compute_backend
+
+    # -- introspection --------------------------------------------------
+    def __len__(self) -> int:
+        return self._t
+
+    def __contains__(self, tenant_id: str) -> bool:
+        return tenant_id in self._trows
+
+    @property
+    def tenant_ids(self) -> List[str]:
+        """Attached tenant ids in row order."""
+        return list(self._tids)
+
+    @property
+    def num_columns(self) -> Optional[int]:
+        return self._c
+
+    @property
+    def state_capacity(self) -> int:
+        return self._scap
+
+    @property
+    def partition_capacity(self) -> int:
+        return self._pcap
+
+    def tenant_row(self, tenant_id: str) -> int:
+        """Packed row index of an attached tenant (KeyError if unknown)."""
+        return self._trows[tenant_id]
+
+    def slot(self, tenant_id: str, state_id: int) -> int:
+        """Packed slot of a tenant's state (KeyError if unknown)."""
+        return self._slots[tenant_id][state_id]
+
+    def state_ids(self, tenant_id: str) -> List[int]:
+        """A tenant's registered state ids in fleet slot order."""
+        return list(self._ids[tenant_id])
+
+    # -- allocation -----------------------------------------------------
+    def _alloc(self, tcap: int, scap: int, pcap: int) -> None:
+        c = self._c
+        mins = np.full((tcap, scap, pcap, c), np.inf)
+        maxs = np.full((tcap, scap, pcap, c), -np.inf)
+        minsT = np.full((c, tcap, scap, pcap), np.inf)
+        maxsT = np.full((c, tcap, scap, pcap), -np.inf)
+        rows = np.zeros((tcap, scap, pcap))
+        totals = np.ones((tcap, scap))
+        self._qlo_buf = np.empty((tcap, c))
+        self._qhi_buf = np.empty((tcap, c))
+        # A freshly-attached tenant row may not exist in the old arrays
+        # yet (attach bumps the row count before ensuring capacity).
+        t = min(self._t, 0 if self._mins is None else self._mins.shape[0])
+        if t and self._mins is not None:
+            old_s, old_p = self._scap, self._pcap
+            mins[:t, :old_s, :old_p] = self._mins[:t]
+            maxs[:t, :old_s, :old_p] = self._maxs[:t]
+            minsT[:, :t, :old_s, :old_p] = self._minsT[:, :t]
+            maxsT[:, :t, :old_s, :old_p] = self._maxsT[:, :t]
+            rows[:t, :old_s, :old_p] = self._rows[:t]
+            totals[:t, :old_s] = self._totals[:t]
+        self._mins, self._maxs = mins, maxs
+        self._minsT, self._maxsT = minsT, maxsT
+        self._rows, self._totals = rows, totals
+        self._tcap, self._scap, self._pcap = tcap, scap, pcap
+
+    def _ensure_capacity(self, t: int, s: int, p: int) -> None:
+        if self._c is None:
+            raise RuntimeError("column count unknown before first register")
+        if (self._mins is None or t > self._tcap or s > self._scap
+                or p > self._pcap):
+            # Geometric growth on every axis keeps reallocation (an
+            # O(plane) copy) amortized O(1) per register even when a
+            # tenant's state count creeps up one at a time.  The state
+            # axis grows by 1.25x+4 rather than doubling: every fused scan
+            # sweeps the full S_cap (contiguity beats masking), so state
+            # padding is pure overhead on the hot path.
+            scap = self._scap
+            if s > scap:
+                scap = max(s, scap + max(scap >> 2, 4))
+            self._alloc(max(self._tcap, 2 * self._t, t), scap,
+                        max(self._pcap, 2 * self._pcap if p > self._pcap
+                            else self._pcap, p))
+
+    # -- tenant attach/detach -------------------------------------------
+    def attach(self, tenant_id: str, matrix: StateMatrix) -> None:
+        """Mirror one tenant's StateMatrix into the plane, then follow its
+        register/deregister events until :meth:`detach`."""
+        if tenant_id in self._trows:
+            raise ValueError(f"tenant {tenant_id!r} already attached")
+        if (matrix.num_columns is not None and self._c is not None
+                and matrix.num_columns != self._c):
+            raise ValueError(
+                f"tenant {tenant_id!r}: {matrix.num_columns} columns, "
+                f"fleet plane has {self._c}")
+        row = self._t
+        self._t += 1
+        self._tids.append(tenant_id)
+        self._trows[tenant_id] = row
+        self._sms[tenant_id] = matrix
+        self._ids[tenant_id] = []
+        self._slots[tenant_id] = {}
+        self._counts[tenant_id] = []
+        if self._c is None:
+            self._c = matrix.num_columns       # may still be None: learned
+        if self._mins is not None and row >= self._tcap:
+            self._ensure_capacity(self._t, self._scap, self._pcap)
+        for sid in matrix.state_ids:           # initial sync, in slot order
+            self._register(tenant_id, sid, matrix.metadata(sid))
+        mirror = _TenantMirror(self, tenant_id)
+        self._mirrors[tenant_id] = mirror
+        matrix.add_listener(mirror)
+        self.version += 1
+
+    def detach(self, tenant_id: str) -> None:
+        """Stop mirroring a tenant and drop its row (swap-with-last).
+        Unknown ids are a no-op."""
+        row = self._trows.pop(tenant_id, None)
+        if row is None:
+            return
+        self._sms.pop(tenant_id).remove_listener(
+            self._mirrors.pop(tenant_id))
+        self._ids.pop(tenant_id)
+        self._slots.pop(tenant_id)
+        self._counts.pop(tenant_id)
+        last = self._t - 1
+        if row != last:
+            if self._mins is not None:
+                self._mins[row] = self._mins[last]
+                self._maxs[row] = self._maxs[last]
+                self._minsT[:, row] = self._minsT[:, last]
+                self._maxsT[:, row] = self._maxsT[:, last]
+                self._rows[row] = self._rows[last]
+                self._totals[row] = self._totals[last]
+            moved = self._tids[last]
+            self._tids[row] = moved
+            self._trows[moved] = row
+        if self._mins is not None:
+            # Reset the vacated last row to padding so a future attach
+            # starts clean without an O(plane) wipe at attach time.
+            self._mins[last] = np.inf
+            self._maxs[last] = -np.inf
+            self._minsT[:, last] = np.inf
+            self._maxsT[:, last] = -np.inf
+            self._rows[last] = 0.0
+            self._totals[last] = 1.0
+        self._tids.pop()
+        self._t = last
+        self.version += 1
+
+    def detach_all(self) -> None:
+        for tid in list(self._tids):
+            self.detach(tid)
+
+    # -- per-state maintenance (O(P*C) per event) -----------------------
+    def _register(self, tid: str, state_id: int,
+                  meta: L.PartitionMetadata) -> None:
+        if self._c is None:
+            self._c = meta.num_columns
+        elif meta.num_columns != self._c:
+            raise ValueError(
+                f"tenant {tid!r} state {state_id}: {meta.num_columns} "
+                f"columns, fleet plane has {self._c}")
+        p = meta.num_partitions
+        ids, slots, counts = self._ids[tid], self._slots[tid], self._counts[tid]
+        slot = slots.get(state_id)
+        if slot is None:
+            slot = len(ids)
+            self._ensure_capacity(self._t, slot + 1, p)
+            ids.append(state_id)
+            slots[state_id] = slot
+            counts.append(p)
+        else:
+            self._ensure_capacity(self._t, slot + 1, p)
+            counts[slot] = p
+        row = self._trows[tid]
+        self._mins[row, slot, :p] = meta.mins
+        self._mins[row, slot, p:] = np.inf
+        self._maxs[row, slot, :p] = meta.maxs
+        self._maxs[row, slot, p:] = -np.inf
+        self._minsT[:, row, slot, :p] = meta.mins.T
+        self._minsT[:, row, slot, p:] = np.inf
+        self._maxsT[:, row, slot, :p] = meta.maxs.T
+        self._maxsT[:, row, slot, p:] = -np.inf
+        self._rows[row, slot, :p] = meta.rows
+        self._rows[row, slot, p:] = 0.0
+        self._totals[row, slot] = max(meta.total_rows, 1)
+        self.version += 1
+
+    def _deregister(self, tid: str, state_id: int) -> None:
+        ids, slots, counts = self._ids[tid], self._slots[tid], self._counts[tid]
+        slot = slots.pop(state_id, None)
+        if slot is None:
+            return
+        row = self._trows[tid]
+        last = len(ids) - 1
+        if slot != last:
+            self._mins[row, slot] = self._mins[row, last]
+            self._maxs[row, slot] = self._maxs[row, last]
+            self._minsT[:, row, slot] = self._minsT[:, row, last]
+            self._maxsT[:, row, slot] = self._maxsT[:, row, last]
+            self._rows[row, slot] = self._rows[row, last]
+            self._totals[row, slot] = self._totals[row, last]
+            moved = ids[last]
+            ids[slot] = moved
+            slots[moved] = slot
+            counts[slot] = counts[last]
+        self._mins[row, last] = np.inf
+        self._maxs[row, last] = -np.inf
+        self._minsT[:, row, last] = np.inf
+        self._maxsT[:, row, last] = -np.inf
+        self._rows[row, last] = 0.0
+        self._totals[row, last] = 1.0
+        ids.pop()
+        counts.pop()
+        self.version += 1
+
+    # -- fused scoring --------------------------------------------------
+    def _scanned_all(self, q_lo: np.ndarray,
+                     q_hi: np.ndarray) -> np.ndarray:
+        """(B, T_cap, S_cap, P_cap) bool fleet scan for (B, T_cap, C)
+        per-frame, per-tenant bounds.
+
+        Detached / beyond-``self._t`` tenant rows and padded slots carry
+        padding bounds and dummy unbounded queries, so their lanes compute
+        garbage-free noise that no caller reads — keeping every operand
+        contiguous is worth the few wasted lanes.
+        """
+        tcap = self._tcap
+        b = q_lo.shape[0]
+        if self.compute_backend == "pallas":
+            n = self._scap * self._pcap
+            mins3 = self._mins.reshape(tcap, n, self._c)
+            maxs3 = self._maxs.reshape(tcap, n, self._c)
+            frames = [
+                compute.fleet_scan_matrix(
+                    q_lo[k], q_hi[k], mins3, maxs3, backend="pallas",
+                ).reshape(tcap, self._scap, self._pcap)
+                for k in range(b)]
+            return np.stack(frames)
+        return compute.fleet_masked_overlap(self._minsT, self._maxsT,
+                                            q_lo, q_hi)
+
+    def estimate_frames(self, frames: Sequence[Sequence[tuple]],
+                        ) -> List[List[Optional[Tuple[int, np.ndarray,
+                                                      Optional[float]]]]]:
+        """Score a block of *frames* — each at most one pending query per
+        tenant — in a single fused pass over the whole plane.
+
+        Each frame is a sequence of ``(tenant_id, q_lo, q_hi)`` triples or
+        ``(tenant_id, Query)`` pairs (the fleet's event tuples, accepted
+        directly so the hot path never re-materializes them), tenants
+        distinct within a frame; several frames per pass amortize the fixed
+        Python cost of the pass over ``B * T`` events.  Returns, aligned
+        with the input, either ``None`` (tenant unknown or has no
+        registered states yet — caller falls back to the per-tenant path)
+        or ``(version, costs, serve)``: ``version`` is the tenant's
+        :attr:`StateMatrix.version` at scoring time, ``costs`` the float64
+        per-slot cost vector, bit-identical (numpy backend) to that
+        tenant's own :meth:`StateMatrix.estimate`, and ``serve`` the
+        serving-shadow slot's score as a float (None when no shadow state
+        is mirrored).  A tenant whose plane changes between scoring and
+        consumption (mid-decision state churn) is expected to be caught by
+        the consumer's version check.
+        """
+        b = len(frames)
+        empty: List[List[Optional[tuple]]] = [
+            [None] * len(fr) for fr in frames]
+        if self._t == 0 or self._mins is None or b == 0:
+            return empty
+        tcap, c = self._tcap, self._c
+        # Tenants without a query in a frame get fully-unbounded dummy
+        # bounds: comparisons against +/-inf are identically True, so they
+        # cannot perturb any other tenant's slice and their (unused) output
+        # costs nothing extra to mask.
+        if self._qlo_buf.shape[0] < b * tcap:
+            self._qlo_buf = np.empty((b * tcap, c))
+            self._qhi_buf = np.empty((b * tcap, c))
+        q_lo = self._qlo_buf[:b * tcap]
+        q_hi = self._qhi_buf[:b * tcap]
+        q_lo.fill(-np.inf)
+        q_hi.fill(np.inf)
+        # Per-distinct-tenant facts resolved once per pass, not per event:
+        # (row, n, version, uniform-reduce ok, StateMatrix, shadow slot).
+        info: Dict[str, Optional[tuple]] = {}
+        live: List[Tuple[int, int, tuple]] = []
+        flat: List[int] = []
+        los: List[np.ndarray] = []
+        his: List[np.ndarray] = []
+        for k, items in enumerate(frames):
+            base = k * tcap
+            for j, item in enumerate(items):
+                if len(item) == 2:
+                    tid, query = item
+                    lo, hi = query.lo, query.hi
+                else:
+                    tid, lo, hi = item
+                entry = info.get(tid, False)
+                if entry is False:
+                    row = self._trows.get(tid)
+                    n = len(self._ids[tid]) if row is not None else 0
+                    if row is None or n == 0:
+                        entry = None
+                    else:
+                        sm = self._sms[tid]
+                        entry = (row, n, sm.version,
+                                 len(sm) == n and sm.uniform
+                                 and sm.partition_capacity == self._pcap,
+                                 sm, self._slots[tid].get(-1))
+                    info[tid] = entry
+                if entry is None:
+                    continue
+                flat.append(base + entry[0])
+                los.append(lo)
+                his.append(hi)
+                live.append((k, j, entry))
+        if not live:
+            return empty
+        idx = np.asarray(flat, dtype=np.intp)
+        q_lo[idx] = np.stack(los)
+        q_hi[idx] = np.stack(his)
+        scanned = self._scanned_all(q_lo.reshape(b, tcap, c),
+                                    q_hi.reshape(b, tcap, c))
+        batched: Optional[np.ndarray] = None
+        out = empty
+        for k, j, (row, n, version, fused_ok, sm, shadow) in live:
+            if fused_ok:
+                # Equal reduce width and contiguity on both paths: the
+                # batched (B, T, S, P) einsum accumulates each output
+                # element exactly like the tenant's own (n, P) einsum, so
+                # one fused reduction covers every such tenant bit-exactly.
+                # (Unequal widths would change numpy's accumulator grouping
+                # — those tenants take the per-tenant reduction below.)
+                if batched is None:
+                    batched = (np.einsum("btsp,tsp->bts", scanned,
+                                         self._rows) / self._totals[None])
+                costs = batched[k, row, :n]
+            elif len(sm) == n:
+                costs = sm.reduce_scanned(np.ascontiguousarray(
+                    scanned[k, row, :n, :sm.partition_capacity]))
+            else:
+                continue            # plane out of sync mid-churn: fall back
+            # The serving-shadow slot (state id -1), when mirrored, rides
+            # along as a ready-made serve score for backends whose serve()
+            # is the exact shadow estimate (InMemoryBackend, numpy).
+            out[k][j] = (version, costs,
+                         float(costs[shadow]) if shadow is not None else None)
+        return out
+
+    def estimate_frame(self, items: Sequence[Tuple[str, np.ndarray,
+                                                   np.ndarray]],
+                       ) -> List[Optional[Tuple[int, np.ndarray,
+                                                Optional[float]]]]:
+        """Single-frame convenience wrapper over :meth:`estimate_frames`."""
+        return self.estimate_frames([items])[0]

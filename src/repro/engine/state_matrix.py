@@ -63,6 +63,18 @@ class StateMatrix:
         self._uniform = True    # all counts == P_cap -> batched reduction
         #: Bumped on every register/deregister; consumers may key caches on it.
         self.version = 0
+        #: Mirror hooks (see :class:`repro.engine.fleet_matrix.FleetMatrix`):
+        #: each listener's ``on_register(state_id, meta)`` /
+        #: ``on_deregister(state_id)`` fires *after* the plane update, in the
+        #: same order the plane saw it, so a mirror replaying the events with
+        #: the same swap-with-last algorithm assigns identical slots.
+        self._listeners: List = []
+
+    def add_listener(self, listener) -> None:
+        self._listeners.append(listener)
+
+    def remove_listener(self, listener) -> None:
+        self._listeners.remove(listener)
 
     # -- introspection --------------------------------------------------
     def __len__(self) -> int:
@@ -83,6 +95,12 @@ class StateMatrix:
     @property
     def partition_capacity(self) -> int:
         return self._pcap
+
+    @property
+    def uniform(self) -> bool:
+        """True when every registered state fills the full partition width,
+        i.e. :meth:`estimate` reduces via the batched einsum path."""
+        return self._uniform
 
     def slot(self, state_id: int) -> int:
         """Packed slot index of a registered state (KeyError if unknown)."""
@@ -163,6 +181,8 @@ class StateMatrix:
         self._rows_exact[slot] = L.self_rows(meta)
         self._refresh_uniform()
         self.version += 1
+        for listener in self._listeners:
+            listener.on_register(state_id, meta)
 
     def deregister(self, state_id: int) -> None:
         """Drop one state; the last slot is swapped into the hole (O(P*C)).
@@ -191,6 +211,8 @@ class StateMatrix:
         self._n = last
         self._refresh_uniform()
         self.version += 1
+        for listener in self._listeners:
+            listener.on_deregister(state_id)
 
     # -- scoring --------------------------------------------------------
     def _scanned(self, q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
@@ -205,17 +227,16 @@ class StateMatrix:
         return compute.masked_overlap(self._minsT[:, :n, :],
                                       self._maxsT[:, :n, :], q_lo, q_hi)
 
-    def estimate(self, q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
-        """Service cost c(s, q) of one query under every registered state.
+    def reduce_scanned(self, scanned: np.ndarray) -> np.ndarray:
+        """Row-weighted reduction of an (n, P_cap) scan matrix to (n,) costs.
 
-        Returns float64 (n,) in slot order — bit-identical (numpy backend)
-        to ``eval_cost_states`` / per-state ``eval_cost`` over the same
-        metadata.
+        The single reduction behind :meth:`estimate` — also invoked by
+        :class:`repro.engine.fleet_matrix.FleetMatrix` on a per-tenant slice
+        of its fused fleet-wide scan, so loop and batched fleet paths reduce
+        through literally the same code on identical operands (bit-identity).
+        ``scanned`` must be C-contiguous, exactly as :meth:`_scanned` emits.
         """
         n = self._n
-        if n == 0:
-            return np.zeros(0)
-        scanned = self._scanned(q_lo, q_hi)
         if self._uniform:
             # All states fill the full partition width: one batched einsum
             # (same contiguous kernel as scanned_dot, so still bit-exact).
@@ -226,6 +247,17 @@ class StateMatrix:
             out[s] = (L.scanned_dot(scanned[s, :self._counts[s]],
                                     self._rows_exact[s]) / self._totals[s])
         return out
+
+    def estimate(self, q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
+        """Service cost c(s, q) of one query under every registered state.
+
+        Returns float64 (n,) in slot order — bit-identical (numpy backend)
+        to ``eval_cost_states`` / per-state ``eval_cost`` over the same
+        metadata.
+        """
+        if self._n == 0:
+            return np.zeros(0)
+        return self.reduce_scanned(self._scanned(q_lo, q_hi))
 
     def estimate_costs(self, state_ids: Sequence[int], q_lo: np.ndarray,
                        q_hi: np.ndarray) -> Dict[int, float]:

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused multi-tenant fleet scan matrix.
+
+One level above :mod:`repro.kernels.pruning`: instead of one query against
+one table's partition bounds, the fleet decision plane scores *every
+tenant's* current query against *that tenant's* packed candidate states in
+a single launch.  Inputs are the packed fleet plane (T, N, C) — N =
+S_max * P_max flattened state-x-partition slots, padded slots carrying
+[+inf, -inf] bounds so they never overlap — and per-tenant query bounds
+(T, C); the output is the (T, N) overlap matrix.
+
+  grid = (T/BT, N/BN); each program holds a (BT, C) query tile and its
+  matching (BT, BN, C) bounds tile in VMEM and accumulates the (BT, BN)
+  overlap AND over column chunks, so the (T, N, C) broadcast tensor never
+  materializes.  The tenant axis rides the sublane dimension: every lane
+  still does the same elementwise compare, only against its own tenant's
+  query row — this is what fuses T kernel launches into one.
+
+Like the single-table kernel this is VPU-bound and memory-bound (~C
+flops/byte over metadata); block sizes keep the working set
+(2*BT*C + 2*BT*BN*C + BT*BN floats) well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BT = 8
+DEFAULT_BN = 128
+
+
+def _kernel(qlo_ref, qhi_ref, pmin_ref, pmax_ref, out_ref, *, col_chunk):
+    qlo = qlo_ref[...]            # (BT, C)
+    qhi = qhi_ref[...]
+    pmin = pmin_ref[...]          # (BT, BN, C)
+    pmax = pmax_ref[...]
+    bt, c = qlo.shape
+    bn = pmin.shape[1]
+    acc = jnp.ones((bt, bn), jnp.float32)
+    n_chunks = pl.cdiv(c, col_chunk)
+    for i in range(n_chunks):
+        lo = i * col_chunk
+        width = min(col_chunk, c - lo)
+        ql = jax.lax.dynamic_slice(qlo, (0, lo), (bt, width))
+        qh = jax.lax.dynamic_slice(qhi, (0, lo), (bt, width))
+        pn = jax.lax.dynamic_slice(pmin, (0, 0, lo), (bt, bn, width))
+        px = jax.lax.dynamic_slice(pmax, (0, 0, lo), (bt, bn, width))
+        ov = ((pn <= qh[:, None, :]) & (px >= ql[:, None, :]))
+        acc = acc * ov.all(axis=-1).astype(jnp.float32)
+    out_ref[...] = acc
+
+
+def scan_fleet_pallas(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                      p_max: jax.Array, bt: int = DEFAULT_BT,
+                      bn: int = DEFAULT_BN, col_chunk: int = 8,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """(T, C) per-tenant bounds x (T, N, C) plane -> (T, N) float32 matrix.
+
+    ``out[t, n]`` is 1.0 iff slot n of tenant t's packed plane overlaps
+    tenant t's query on every column.  ``interpret=None`` auto-selects: the
+    compiled kernel when JAX has an accelerator backend (TPU/GPU), the
+    Pallas interpreter on CPU-only hosts.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _scan_fleet_call(q_lo, q_hi, p_min, p_max, bt=bt, bn=bn,
+                            col_chunk=col_chunk, interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bn", "col_chunk",
+                                             "interpret"))
+def _scan_fleet_call(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                     p_max: jax.Array, bt: int, bn: int, col_chunk: int,
+                     interpret: bool) -> jax.Array:
+    T, C = q_lo.shape
+    N = p_min.shape[1]
+    bt = min(bt, T)
+    bn = min(bn, N)
+    pad_t = (-T) % bt
+    pad_n = (-N) % bn
+    if pad_t:
+        # Padded tenant rows get empty queries ([1, 0] per column) so their
+        # outputs are 0 and sliced away.
+        q_lo = jnp.pad(q_lo, ((0, pad_t), (0, 0)), constant_values=1.0)
+        q_hi = jnp.pad(q_hi, ((0, pad_t), (0, 0)), constant_values=0.0)
+        p_min = jnp.pad(p_min, ((0, pad_t), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        p_max = jnp.pad(p_max, ((0, pad_t), (0, 0), (0, 0)),
+                        constant_values=0.0)
+    if pad_n:
+        # Padded slots get empty bounds: never scanned, for any query.
+        p_min = jnp.pad(p_min, ((0, 0), (0, pad_n), (0, 0)),
+                        constant_values=1.0)
+        p_max = jnp.pad(p_max, ((0, 0), (0, pad_n), (0, 0)),
+                        constant_values=0.0)
+    Tp, Np = T + pad_t, N + pad_n
+    grid = (Tp // bt, Np // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, col_chunk=col_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, bn, C), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bt, bn, C), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, Np), jnp.float32),
+        interpret=interpret,
+    )(q_lo, q_hi, p_min, p_max)
+    return out[:T, :N]

@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the fused fleet-scan kernel.
+
+Dispatches to the Pallas kernel on accelerator backends (compiled) /
+interpret mode on CPU, and to the jnp oracle when the kernel is bypassed.
+``fleet_scan_fractions`` composes the kernel with the per-tenant row-count
+weighting used by the cost model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fleet_scan import fleet_scan, ref
+
+
+def scan_fleet(q_lo, q_hi, p_min, p_max, use_kernel: bool = True,
+               **block_kw) -> jax.Array:
+    if not use_kernel:
+        return ref.scan_fleet(q_lo, q_hi, p_min, p_max)
+    return fleet_scan.scan_fleet_pallas(q_lo, q_hi, p_min, p_max, **block_kw)
+
+
+@jax.jit
+def fleet_scan_fractions(q_lo, q_hi, p_min, p_max, rows) -> jax.Array:
+    """(T, N) scan matrix reduced to (T,) fraction-of-rows-read per tenant.
+
+    ``rows`` is (T, N): per-slot row counts, zero in padded slots, so each
+    tenant's fraction is sum(scanned rows) / sum(all rows).
+    """
+    m = ref.scan_fleet(q_lo, q_hi, p_min, p_max)   # jnp path under jit
+    rows = rows.astype(jnp.float32)
+    total = jnp.maximum(rows.sum(axis=1), 1.0)
+    return (m * rows).sum(axis=1) / total

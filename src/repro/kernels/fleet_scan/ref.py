@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused fleet scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def scan_fleet(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+               p_max: jax.Array) -> jax.Array:
+    """(T, C) x (T, N, C) -> (T, N) float32 overlap matrix (broadcasting)."""
+    ov = ((p_min <= q_hi[:, None, :]) & (p_max >= q_lo[:, None, :]))
+    return ov.all(axis=-1).astype(jnp.float32)

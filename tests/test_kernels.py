@@ -7,6 +7,8 @@ import pytest
 from repro.kernels.flash_attention import flash_attention as fa
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.fleet_scan import fleet_scan, ops as fleet_ops
+from repro.kernels.fleet_scan import ref as fleet_ref
 from repro.kernels.pruning import pruning, ref as prune_ref
 from repro.kernels.zorder import ref as z_ref, zorder
 
@@ -97,6 +99,106 @@ def test_pruning_agrees_with_core_cost_model():
                                      p_max.astype(np.float32),
                                      interpret=True)
     np.testing.assert_array_equal(np.asarray(got) > 0.5, want)
+
+
+# ---------------------------------------------------------------------------
+# fleet_scan kernel (fused multi-tenant scan matrix)
+# ---------------------------------------------------------------------------
+
+def _fleet_case(T, N, C, seed):
+    rng = np.random.default_rng(seed)
+    p_min = rng.uniform(0, 1, (T, N, C)).astype(np.float32)
+    p_max = p_min + rng.uniform(0, 0.5, (T, N, C)).astype(np.float32)
+    q_lo = rng.uniform(0, 1, (T, C)).astype(np.float32)
+    q_hi = q_lo + rng.uniform(0, 0.5, (T, C)).astype(np.float32)
+    return q_lo, q_hi, p_min, p_max
+
+
+@pytest.mark.parametrize("T,N,C", [(1, 8, 4), (4, 64, 8), (32, 56, 6),
+                                   (17, 130, 7), (3, 5, 1)])
+def test_fleet_scan_matches_ref(T, N, C):
+    q_lo, q_hi, p_min, p_max = _fleet_case(T, N, C, T * 1000 + N)
+    got = fleet_scan.scan_fleet_pallas(q_lo, q_hi, p_min, p_max,
+                                       interpret=True)
+    want = fleet_ref.scan_fleet(q_lo, q_hi, p_min, p_max)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("T,N,C,bt,bn,col_chunk", [
+    (17, 130, 7, 8, 128, 8),    # T and N ragged vs the block sizes
+    (5, 33, 5, 4, 16, 2),       # ragged everywhere, C % col_chunk != 0
+    (8, 64, 9, 8, 32, 4),       # C not a multiple of col_chunk
+    (1, 3, 1, 8, 8, 8),         # tiny: blocks clamp to the problem size
+    (8, 128, 8, 8, 128, 8),     # exact multiples (no padding at all)
+])
+def test_fleet_scan_ragged_padding_parity(T, N, C, bt, bn, col_chunk):
+    """Kernel == jnp oracle on every ragged T/N/C padding edge, with
+    interpret auto-selected (None -> interpreter on CPU-only hosts)."""
+    q_lo, q_hi, p_min, p_max = _fleet_case(T, N, C, T * 7919 + N * 31 + C)
+    got = fleet_scan.scan_fleet_pallas(q_lo, q_hi, p_min, p_max, bt=bt,
+                                       bn=bn, col_chunk=col_chunk,
+                                       interpret=None)
+    want = fleet_ref.scan_fleet(q_lo, q_hi, p_min, p_max)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fleet_scan_per_tenant_rows_match_pruning_kernel():
+    """Each tenant lane of the fused kernel equals the single-table
+    pruning kernel run on that tenant's own bounds and query."""
+    T, N, C = 6, 40, 5
+    q_lo, q_hi, p_min, p_max = _fleet_case(T, N, C, 99)
+    fused = np.asarray(fleet_scan.scan_fleet_pallas(q_lo, q_hi, p_min,
+                                                    p_max, interpret=True))
+    for t in range(T):
+        single = pruning.scan_matrix_pallas(q_lo[t:t + 1], q_hi[t:t + 1],
+                                            p_min[t], p_max[t],
+                                            interpret=True)
+        np.testing.assert_array_equal(fused[t], np.asarray(single)[0])
+
+
+def test_fleet_scan_matches_engine_exact_path():
+    """Kernel semantics == the engine's exact float64 fleet overlap (on
+    float32-representable bounds), across the (C, T, S, P) layout."""
+    from repro.engine import compute as engine_compute
+    rng = np.random.default_rng(12)
+    T, S, P, C = 4, 3, 8, 4
+    mins = rng.uniform(0, 1, (T, S, P, C)).astype(np.float32).astype(
+        np.float64)
+    maxs = mins + rng.uniform(0, 0.5, (T, S, P, C)).astype(
+        np.float32).astype(np.float64)
+    q_lo = rng.uniform(0, 1, (T, C)).astype(np.float32).astype(np.float64)
+    q_hi = q_lo + 0.25
+    minsT = np.ascontiguousarray(np.moveaxis(mins, 3, 0))
+    maxsT = np.ascontiguousarray(np.moveaxis(maxs, 3, 0))
+    want = engine_compute.fleet_masked_overlap(minsT, maxsT, q_lo, q_hi)
+    got = engine_compute.fleet_scan_matrix(
+        q_lo, q_hi, mins.reshape(T, S * P, C), maxs.reshape(T, S * P, C),
+        backend="pallas").reshape(T, S, P)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fleet_scan_fractions_weights_rows():
+    rng = np.random.default_rng(13)
+    T, N, C = 3, 16, 4
+    q_lo, q_hi, p_min, p_max = _fleet_case(T, N, C, 13)
+    rows = rng.integers(1, 100, (T, N)).astype(np.float32)
+    frac = np.asarray(fleet_ops.fleet_scan_fractions(
+        jnp.asarray(q_lo), jnp.asarray(q_hi), jnp.asarray(p_min),
+        jnp.asarray(p_max), jnp.asarray(rows)))
+    scan = np.asarray(fleet_ref.scan_fleet(q_lo, q_hi, p_min, p_max))
+    want = (scan * rows).sum(1) / np.maximum(rows.sum(1), 1.0)
+    np.testing.assert_allclose(frac, want, rtol=1e-6)
+    assert np.all(frac >= 0) and np.all(frac <= 1)
+
+
+def test_fleet_ops_wrapper_dispatches():
+    q_lo, q_hi, p_min, p_max = _fleet_case(2, 8, 3, 7)
+    via_kernel = fleet_ops.scan_fleet(q_lo, q_hi, p_min, p_max,
+                                      use_kernel=True, interpret=True)
+    via_oracle = fleet_ops.scan_fleet(q_lo, q_hi, p_min, p_max,
+                                      use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(via_kernel),
+                                  np.asarray(via_oracle))
 
 
 # ---------------------------------------------------------------------------
