@@ -6,7 +6,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 BENCH_DIR ?= .bench
 
 .PHONY: test test-kernels lint bench bench-full bench-smoke bench-gate \
-        bench-fleet-smoke bench-fleet-gate quickstart install
+        bench-fleet-smoke bench-fleet-gate bench-reorg-smoke \
+        bench-reorg-gate quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -27,11 +28,13 @@ bench:
 	$(PYTHON) benchmarks/run.py --quick
 
 # Full-size benchmark grids (nightly CI): decision loop sweep + fleet
-# scenario x scheduler x tenant-sweep grid, JSON into $(BENCH_DIR).
+# scenario x scheduler x tenant-sweep grid + reorg atomic-vs-incremental
+# grid, JSON into $(BENCH_DIR).
 bench-full:
 	mkdir -p $(BENCH_DIR)
 	$(PYTHON) benchmarks/bench_decision_loop.py --out $(BENCH_DIR)/BENCH_decision_loop.json
 	$(PYTHON) benchmarks/bench_fleet.py --out $(BENCH_DIR)/BENCH_fleet.json
+	$(PYTHON) benchmarks/bench_reorg.py --out $(BENCH_DIR)/BENCH_reorg.json
 
 bench-smoke:
 	mkdir -p $(BENCH_DIR)
@@ -46,6 +49,13 @@ bench-fleet-smoke:
 
 bench-fleet-gate: bench-fleet-smoke
 	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_fleet_smoke.json --baseline BENCH_fleet.json
+
+bench-reorg-smoke:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_reorg.py --smoke --out $(BENCH_DIR)/bench_reorg_smoke.json
+
+bench-reorg-gate: bench-reorg-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_reorg_smoke.json --baseline BENCH_reorg.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -8,12 +8,19 @@ benchmark families:
   re-padding path (section ``speedup_vs_reference``);
 * ``bench_fleet.py --smoke`` vs ``BENCH_fleet.json`` — the fleet
   ``run_batched`` throughput divided by the stepwise loop on the tenant
-  sweep (section ``speedup_batched_vs_loop``).
+  sweep (section ``speedup_batched_vs_loop``);
+* ``bench_reorg.py --smoke`` vs ``BENCH_reorg.json`` — the combined
+  query+reorg cost of atomic-deferred migration divided by incremental
+  migration under the same maintenance budget (section
+  ``cost_ratio_atomic_over_incremental``; ratio > 1 means the
+  incremental plane is paying off).
 
 Raw queries/sec are not comparable across machines, so the gate checks
-**speedup ratios**, both sides measured in the same process on the same
-runner: a slowdown isolated to the optimized path drags the ratio down
-wherever it runs.
+**ratios**, both sides measured in the same process on the same runner:
+a slowdown isolated to the optimized path drags a speedup ratio down
+wherever it runs, and the reorg cost ratios are deterministic given the
+benchmark seeds, so any drop is a behavioral regression rather than
+machine noise.
 
 Fails (exit 1) if, for any config x mode present in both files, the
 fresh speedup falls below ``(1 - tolerance)`` of the baseline speedup.
@@ -37,11 +44,12 @@ import json
 import os
 import sys
 
-#: Sections holding {config_key: {mode: speedup}} grids, per family.
-SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop")
+#: Sections holding {config_key: {mode: ratio}} grids, per family.
+SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop",
+            "cost_ratio_atomic_over_incremental")
 #: Dedicated smoke-baseline sections a checked-in file may carry; their
 #: grids win over the top-level (full-sweep) numbers for shared keys.
-SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke")
+SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke", "reorg_smoke")
 
 
 def load_speedups(payload: dict, prefer_smoke: bool) -> dict:

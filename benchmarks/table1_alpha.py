@@ -40,7 +40,7 @@ def run(quick: bool = False) -> List[str]:
             # Reorganization: read + BID update + shuffle + compress + write.
             gen = make_generator("qdtree")
             layout = gen(1, data, queries, common.PARTITIONS)
-            reorg_s = store.reorganize(layout)
+            reorg_s = store.reorganize(layout).seconds
             alpha = reorg_s / max(scan_s, 1e-9)
             rows.append(common.csv_row(
                 f"table1.size_{mb}mb", scan_s * 1e6,

@@ -29,12 +29,68 @@ class ScanStats:
     seconds: float
 
 
+@dataclasses.dataclass
+class ReorgStats:
+    """Outcome of one :meth:`PartitionStore.reorganize` call.
+
+    ``partitions_rewritten`` counts partitions whose row set changed under
+    the new layout (re-compressed and rewritten); ``partitions_skipped``
+    counts partitions whose row set is identical between the layouts —
+    their files are carried over without re-routing, re-compressing or
+    re-serializing a single row.
+    """
+
+    seconds: float
+    partitions_rewritten: int
+    partitions_skipped: int
+    rows_rewritten: int
+
+    def __float__(self) -> float:
+        return self.seconds
+
+
+def write_manifest(root: str, num_partitions: int, mins, maxs, rows,
+                   layout_name: str) -> None:
+    """Write a store directory's manifest — the single producer of the
+    format :meth:`PartitionStore.metadata` parses, shared by full writes,
+    skip-aware reorganization, and incremental migration completion."""
+    manifest = {"num_partitions": int(num_partitions),
+                "mins": [list(m) for m in mins],
+                "maxs": [list(m) for m in maxs],
+                "rows": [int(r) for r in rows],
+                "layout": layout_name}
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def chunk_bounds(chunk: np.ndarray, num_columns: int):
+    """One partition's (mins, maxs) manifest rows; empty partitions carry
+    the [+inf, -inf] identity bounds."""
+    if len(chunk):
+        return chunk.min(axis=0).tolist(), chunk.max(axis=0).tolist()
+    return ([float("inf")] * num_columns, [float("-inf")] * num_columns)
+
+
 class PartitionStore:
     """On-disk partitioned table with zone-map metadata."""
 
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
+
+    def _fresh_tmp(self) -> str:
+        tmp = self.root + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        return tmp
+
+    def _swap_in(self, tmp: str) -> None:
+        # Atomic swap (background reorganization completes, then the layout
+        # pointer flips -- §III-B).
+        if os.path.exists(self.root):
+            shutil.rmtree(self.root)
+        os.rename(tmp, self.root)
 
     # ------------------------------------------------------------------
     def write(self, data: np.ndarray, layout: L.Layout,
@@ -44,52 +100,83 @@ class PartitionStore:
         t0 = time.time()
         assignment = (layout.route(data) if layout.route is not None
                       else np.zeros(len(data), np.int64))
-        tmp = self.root + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
+        tmp = self._fresh_tmp()
         k = layout.num_partitions
         mins, maxs, rows = [], [], []
         save = np.savez_compressed if compress else np.savez
         for p in range(k):
             chunk = data[assignment == p]
             save(os.path.join(tmp, f"part_{p:05d}.npz"), rows=chunk)
-            if len(chunk):
-                mins.append(chunk.min(axis=0).tolist())
-                maxs.append(chunk.max(axis=0).tolist())
-            else:
-                mins.append([float("inf")] * data.shape[1])
-                maxs.append([float("-inf")] * data.shape[1])
+            lo, hi = chunk_bounds(chunk, data.shape[1])
+            mins.append(lo)
+            maxs.append(hi)
             rows.append(int((assignment == p).sum()))
-        manifest = {"num_partitions": k, "mins": mins, "maxs": maxs,
-                    "rows": rows, "layout": layout.name}
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        # Atomic swap (background reorganization completes, then the layout
-        # pointer flips -- §III-B).
-        if os.path.exists(self.root):
-            shutil.rmtree(self.root)
-        os.rename(tmp, self.root)
+        write_manifest(tmp, k, mins, maxs, rows, layout.name)
+        self._swap_in(tmp)
         return time.time() - t0
 
     # ------------------------------------------------------------------
-    def reorganize(self, layout: L.Layout) -> float:
-        """Full reorganization as the paper measures it (Table I): read every
+    def reorganize(self, layout: L.Layout) -> ReorgStats:
+        """Reorganization as the paper measures it (Table I): read every
         partition back from disk, update the BID column (re-route), shuffle
-        rows into their new partitions (sort by BID), then compress and write
-        the new partition files.  Returns seconds."""
+        rows into their new partitions (sort by BID), then compress and
+        write the new partition files — *except* partitions whose row set
+        is unchanged between the layouts, whose existing files are carried
+        over as-is instead of being pointlessly re-compressed (a layout
+        switch between similar trees often leaves most partitions alone).
+        Returns a :class:`ReorgStats` with the rewritten/skipped split.
+        """
         t0 = time.time()
         meta = self.metadata()
         chunks = []
         for p in range(meta.num_partitions):
             with np.load(os.path.join(self.root, f"part_{p:05d}.npz")) as z:
                 chunks.append(z["rows"])
-        data = np.concatenate([c for c in chunks if len(c)])
-        bid = layout.route(data)                       # update BID column
+        data = np.concatenate([c for c in chunks if len(c)]
+                              or [np.zeros((0, meta.num_columns))])
+        bid = (layout.route(data) if layout.route is not None
+               else np.zeros(len(data), np.int64))     # update BID column
         order = np.argsort(bid, kind="stable")         # shuffle by BID
-        data = data[order]
-        self.write(data, layout)
-        return time.time() - t0
+        k = layout.num_partitions
+
+        # Old partition p is reusable for new partition p iff the row sets
+        # coincide (order-insensitive: shuffling within a partition changes
+        # neither its zone maps nor any scan result).
+        def row_key(rows: np.ndarray) -> np.ndarray:
+            return rows[np.lexsort(rows.T[::-1])] if len(rows) else rows
+
+        tmp = self._fresh_tmp()
+        mins, maxs, rows_out = [], [], []
+        rewritten = skipped = rows_rewritten = 0
+        save = np.savez_compressed
+        sorted_bid = bid[order]
+        bounds = np.searchsorted(sorted_bid, np.arange(k + 1))
+        for p in range(k):
+            chunk = data[order[bounds[p]:bounds[p + 1]]]
+            # Reuse requires an existing file to carry over: a partition
+            # index beyond the old layout's count is always (re)written.
+            identical = (p < len(chunks)
+                         and len(chunk) == len(chunks[p])
+                         and np.array_equal(row_key(chunk),
+                                            row_key(chunks[p])))
+            if identical:
+                shutil.copyfile(os.path.join(self.root, f"part_{p:05d}.npz"),
+                                os.path.join(tmp, f"part_{p:05d}.npz"))
+                skipped += 1
+            else:
+                save(os.path.join(tmp, f"part_{p:05d}.npz"), rows=chunk)
+                rewritten += 1
+                rows_rewritten += len(chunk)
+            lo, hi = chunk_bounds(chunk, data.shape[1])
+            mins.append(lo)
+            maxs.append(hi)
+            rows_out.append(int(len(chunk)))
+        write_manifest(tmp, k, mins, maxs, rows_out, layout.name)
+        self._swap_in(tmp)
+        return ReorgStats(seconds=time.time() - t0,
+                          partitions_rewritten=rewritten,
+                          partitions_skipped=skipped,
+                          rows_rewritten=rows_rewritten)
 
     # ------------------------------------------------------------------
     def metadata(self) -> L.PartitionMetadata:

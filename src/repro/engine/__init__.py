@@ -30,6 +30,15 @@ Layers:
   (:class:`UnlimitedScheduler` / :class:`KConcurrentScheduler` /
   :class:`TokenBucketScheduler`), with drift scenarios in
   :data:`repro.core.workload.DRIFT_SCENARIOS`.
+* :mod:`repro.engine.reorg` — the incremental reorganization plane:
+  ``LayoutEngine(..., incremental=True)`` turns each charged
+  reorganization into a planned sequence of micro-moves
+  (:func:`plan_migration`) executed under a per-tick row budget
+  (:class:`ReorgExecutor`), with the backends serving a *hybrid* state
+  mixing moved and unmoved partitions while a migration is in flight.
+  Charges are untouched (α at decision time, worst-case accounting
+  intact); with an unbounded budget the traces are bit-identical to the
+  atomic loop.
 * :class:`FleetMatrix` — the packed multi-tenant decision plane behind
   :meth:`FleetEngine.run_batched`: every tenant's StateMatrix stacked
   into one ``(T, S_max, P_max, C)`` tensor family, maintained
@@ -45,6 +54,8 @@ from repro.engine.fleet_matrix import FleetMatrix
 from repro.engine.policies import (Decision, GreedyPolicy, MTSOptimalPolicy,
                                    OfflineOptimalPolicy, OreoPolicy, Policy,
                                    RegretPolicy, StaticPolicy)
+from repro.engine.reorg import (MicroMove, MigrationPlan, MigrationRecord,
+                                ReorgExecutor, plan_migration)
 from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
                                     TokenBucketScheduler, UnlimitedScheduler)
 from repro.engine.state_matrix import StateMatrix
@@ -52,9 +63,10 @@ from repro.engine.state_matrix import StateMatrix
 __all__ = [
     "Decision", "DiskBackend", "FleetEngine", "FleetMatrix", "FleetResult",
     "FleetStepResult", "GreedyPolicy", "InMemoryBackend",
-    "KConcurrentScheduler", "LayoutEngine", "MTSOptimalPolicy",
-    "OfflineOptimalPolicy", "OreoPolicy", "Policy", "RegretPolicy",
-    "ReorgScheduler", "StateMatrix", "StaticPolicy", "StepResult",
-    "StorageBackend", "TokenBucketScheduler", "UnlimitedScheduler",
-    "fleet_scan_matrix", "scan_matrix",
+    "KConcurrentScheduler", "LayoutEngine", "MTSOptimalPolicy", "MicroMove",
+    "MigrationPlan", "MigrationRecord", "OfflineOptimalPolicy", "OreoPolicy",
+    "Policy", "RegretPolicy", "ReorgExecutor", "ReorgScheduler",
+    "StateMatrix", "StaticPolicy", "StepResult", "StorageBackend",
+    "TokenBucketScheduler", "UnlimitedScheduler", "fleet_scan_matrix",
+    "plan_migration", "scan_matrix",
 ]

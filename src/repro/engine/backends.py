@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import layouts as L
 from repro.core import workload as wl
-from repro.data.partition_store import PartitionStore
+from repro.data.partition_store import PartitionStore, write_manifest
 
 from . import compute
 from .state_matrix import StateMatrix
@@ -46,6 +46,16 @@ class StorageBackend(Protocol):
        for unknown ids; must not disturb the serving layout even if the
        serving state itself is deregistered (the physical table survives
        until the next swap, exactly like the legacy runner).
+
+    Backends that support the *incremental* reorganization plane
+    (:mod:`repro.engine.reorg`) additionally expose ``serving_layout``
+    plus the migration triple ``begin_migration(plan)`` /
+    ``apply_migration(hybrid_meta, newly_done)`` /
+    ``complete_migration(plan)``: while a migration is in flight the
+    backend serves from a *hybrid* state whose zone maps mix moved
+    (target) and unmoved (source) partitions, and completion snaps to the
+    target through the same path :meth:`activate` takes.  These are
+    optional capabilities, like ``serve_block`` / ``prime_estimates``.
     """
 
     def register(self, layout: L.Layout) -> None: ...
@@ -231,6 +241,7 @@ class InMemoryBackend(_RegistryMixin):
         self._serving_cache: Optional[tuple] = None
         self._serve_memo: Optional[tuple] = None
         self._shadow_slot: Optional[tuple] = None   # (plane version, slot)
+        self._migration = None                      # in-flight MigrationPlan
 
     def prepare(self, state_id: int) -> None:
         # In-memory reorganization is instantaneous; nothing to overlap.
@@ -241,20 +252,69 @@ class InMemoryBackend(_RegistryMixin):
         """State ids with in-flight physical work (always empty here)."""
         return []
 
-    def activate(self, state_id: int) -> None:
-        layout = self._layouts[state_id]
-        meta = layout.materialize(self.data)
-        self._serving = layout
+    def _install_serving_meta(self, meta: L.PartitionMetadata) -> None:
+        """Swap the physical serving zone maps (layout or hybrid state)."""
         self._serving_cache = (np.ascontiguousarray(meta.mins.T),
                                np.ascontiguousarray(meta.maxs.T),
                                L.self_rows(meta), max(meta.total_rows, 1))
         self._serve_memo = None
         if self._matrix is not None:
+            # Re-registering the shadow fires the StateMatrix listener
+            # events, so an attached FleetMatrix keeps scoring this
+            # tenant's (possibly hybrid) serving state in the fused pass.
             self._matrix.register(self.SERVING_SHADOW, meta)
+
+    def _activate_layout(self, layout: L.Layout) -> None:
+        self._serving = layout
+        self._install_serving_meta(layout.materialize(self.data))
+
+    def activate(self, state_id: int) -> None:
+        self._activate_layout(self._layouts[state_id])
 
     @property
     def serving_state(self) -> Optional[int]:
         return None if self._serving is None else self._serving.layout_id
+
+    # -- incremental migration (see repro.engine.reorg) -----------------
+    @property
+    def serving_layout(self) -> Optional[L.Layout]:
+        """The Layout object behind :attr:`serving_state` (source of an
+        in-flight migration)."""
+        return self._serving
+
+    @property
+    def supports_incremental(self) -> bool:
+        """Hybrid serving needs the packed plane (``reference`` compute
+        serves straight off the layout object and cannot mix states)."""
+        return self._compute != "reference"
+
+    @property
+    def migrating(self) -> bool:
+        return self._migration is not None
+
+    def begin_migration(self, plan) -> None:
+        """An incremental migration starts; serving is untouched until the
+        first completed micro-batch lands via :meth:`apply_migration`."""
+        if self._migration is not None:
+            raise RuntimeError("a migration is already in flight")
+        self._migration = plan
+
+    def apply_migration(self, hybrid_meta: L.PartitionMetadata,
+                        newly_done: Sequence[int]) -> None:
+        """A micro-batch of moves completed: serve the hybrid state.
+
+        The hybrid zone maps become the physical serving state (and the
+        SERVING_SHADOW plane entry), so estimates, serve fusion and block
+        serving all score the mixed moved/unmoved partitioning exactly.
+        """
+        self._install_serving_meta(hybrid_meta)
+
+    def complete_migration(self, plan) -> None:
+        """The last move landed: snap to the target layout through the
+        same path :meth:`activate` takes (bitwise the atomic end state,
+        even if the target state was evicted mid-flight)."""
+        self._migration = None
+        self._activate_layout(plan.target)
 
     def estimate_costs(self, state_ids: Sequence[int],
                        query: wl.Query) -> Dict[int, float]:
@@ -375,6 +435,9 @@ class DiskBackend(_RegistryMixin):
                                        PartitionStore, dict]] = {}
         self.initial_write_seconds = 0.0
         self.reorg_seconds: List[float] = []
+        # In-flight incremental migration (see repro.engine.reorg):
+        # (plan, partial target store, done mask, hybrid metadata).
+        self._migration: Optional[tuple] = None
 
     # ------------------------------------------------------------------
     def _new_store(self) -> PartitionStore:
@@ -465,7 +528,114 @@ class DiskBackend(_RegistryMixin):
         with self._lock:
             return not entry["done"]
 
+    # -- incremental migration (see repro.engine.reorg) -----------------
+    @property
+    def serving_layout(self) -> Optional[L.Layout]:
+        """The Layout object behind :attr:`serving_state`."""
+        return self._serving_layout
+
+    @property
+    def supports_incremental(self) -> bool:
+        return True
+
+    @property
+    def migrating(self) -> bool:
+        return self._migration is not None
+
+    def begin_migration(self, plan) -> None:
+        """Open a partial target store; partition files land move by move."""
+        if self._migration is not None:
+            raise RuntimeError("a migration is already in flight")
+        store = self._new_store()
+        done = np.zeros(plan.num_target_partitions, dtype=bool)
+        self._migration = (plan, store, done, None)
+
+    def _write_target_partition(self, plan, store: PartitionStore,
+                                j: int) -> None:
+        save = np.savez_compressed if self.compress else np.savez
+        save(os.path.join(store.root, f"part_{j:05d}.npz"),
+             rows=plan.target_partition_rows(self.data, j))
+
+    def apply_migration(self, hybrid_meta: L.PartitionMetadata,
+                        newly_done: Sequence[int]) -> None:
+        """A micro-batch of moves completed: write the moved target
+        partitions' files and serve the hybrid state from here on.
+
+        Moved rows physically live in the partial target store; the old
+        store's files are left untouched and their moved rows are filtered
+        out logically at scan time (rewriting every touched source file
+        per micro-batch would re-pay the move many times over — the same
+        reasoning the skip-aware ``PartitionStore.reorganize`` applies).
+        """
+        plan, store, done, _ = self._migration
+        for j in newly_done:
+            self._write_target_partition(plan, store, j)
+        done[list(newly_done)] = True
+        self._migration = (plan, store, done, hybrid_meta)
+
+    def complete_migration(self, plan) -> None:
+        """The last move landed: finish the target store and flip to it.
+
+        Identical partitions (never moved) are copied file-for-file from
+        the old store; remaining empty partitions get empty files; the
+        manifest is the target's exact metadata.  No full rewrite happens.
+        """
+        _, store, done, _ = self._migration
+        self._migration = None
+        meta = plan.target_meta
+        save = np.savez_compressed if self.compress else np.savez
+        for j in range(plan.num_target_partitions):
+            if done[j]:
+                continue
+            src = plan.identical.get(j)
+            if src is not None and self._serving_store is not None:
+                shutil.copyfile(
+                    os.path.join(self._serving_store.root,
+                                 f"part_{src:05d}.npz"),
+                    os.path.join(store.root, f"part_{j:05d}.npz"))
+            else:
+                # Only empty target partitions reach here (every non-empty
+                # non-identical partition was a planned move).
+                save(os.path.join(store.root, f"part_{j:05d}.npz"),
+                     rows=self.data[plan.target_assignment == j])
+        write_manifest(store.root, plan.num_target_partitions,
+                       meta.mins.tolist(), meta.maxs.tolist(), meta.rows,
+                       plan.target.name)
+        old = self._serving_store
+        self._serving_store, self._serving_layout = store, plan.target
+        if old is not None:
+            shutil.rmtree(old.root, ignore_errors=True)
+
+    def _serve_hybrid(self, query: wl.Query) -> float:
+        """Scan the hybrid state: residual source partitions (moved rows
+        filtered out) + moved target partitions, skipped by the hybrid
+        zone maps.  ``rows_read`` counts logical hybrid rows, matching the
+        metadata cost model the simulation backends charge."""
+        plan, store, done, hybrid_meta = self._migration
+        scanned = L.partitions_scanned(hybrid_meta, query.lo, query.hi)
+        p_s = plan.num_source_partitions
+        rows_read = 0
+        for p in np.nonzero(scanned)[0]:
+            if p < p_s:
+                path = os.path.join(self._serving_store.root,
+                                    f"part_{p:05d}.npz")
+                # The physical read (scan realism for wall-clock numbers);
+                # the *logical* row count comes from the mask alone — no
+                # filtered copy is materialized just to be measured.
+                with np.load(path) as z:
+                    rows_in_file = len(z["rows"])
+                moved = plan.source_moved_mask(int(p), done)
+                rows_read += rows_in_file - int(moved.sum())
+            else:
+                j = int(p) - p_s
+                with np.load(os.path.join(store.root,
+                                          f"part_{j:05d}.npz")) as z:
+                    rows_read += len(z["rows"])
+        return rows_read / max(len(self.data), 1)
+
     def serve(self, query: wl.Query) -> float:
+        if self._migration is not None and self._migration[3] is not None:
+            return self._serve_hybrid(query)
         _, stats = self._serving_store.scan(query)
         return stats.rows_read / max(len(self.data), 1)
 
@@ -478,6 +648,10 @@ class DiskBackend(_RegistryMixin):
             if thread is not None:
                 thread.join()
             shutil.rmtree(store.root, ignore_errors=True)
+        if self._migration is not None:
+            _, store, _, _ = self._migration
+            shutil.rmtree(store.root, ignore_errors=True)
+            self._migration = None
         if self._serving_store is not None:
             shutil.rmtree(self._serving_store.root, ignore_errors=True)
             self._serving_store = self._serving_layout = None

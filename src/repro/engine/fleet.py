@@ -123,6 +123,20 @@ class _TenantGovernor:
                   state_id: int) -> bool:
         return self.fleet._may_apply(self.tenant_id, engine, state_id)
 
+    def may_begin(self, engine: LayoutEngine, due_index: int,
+                  state_id: int) -> bool:
+        # Incremental variant of may_apply: the granted unit stays held
+        # for the whole migration (released via on_complete), so the
+        # scheduler sees in-flight migrations as in-flight work.
+        return self.fleet._may_apply(self.tenant_id, engine, state_id,
+                                     hold=True)
+
+    def on_complete(self, engine: LayoutEngine, state_id: int) -> None:
+        self.fleet._on_complete(self.tenant_id)
+
+    def grant_rows(self, engine: LayoutEngine, want: int) -> int:
+        return self.fleet._grant_rows(self.tenant_id, want)
+
 
 class FleetEngine:
     """Drives N tenant engines over one interleaved query stream.
@@ -137,12 +151,32 @@ class FleetEngine:
 
     def __init__(self, tenants: Mapping[str, LayoutEngine],
                  scheduler: Optional[ReorgScheduler] = None,
-                 name: str = "fleet"):
+                 name: str = "fleet",
+                 incremental: Optional[bool] = None):
         if not tenants:
             raise ValueError("a fleet needs at least one tenant")
         self.name = name
         self.scheduler = scheduler or UnlimitedScheduler()
         self._tenants: Dict[str, LayoutEngine] = dict(tenants)
+        #: Incremental fleet mode (see :mod:`repro.engine.reorg`): every
+        #: tenant engine must have been built with ``incremental=True``;
+        #: scheduler grants are then held for whole migrations and
+        #: ``grant_rows`` meters per-tick row budgets.  ``None`` infers
+        #: the mode from the tenants (which must agree).
+        modes = {tid: e.incremental for tid, e in self._tenants.items()}
+        if incremental is None:
+            if len(set(modes.values())) > 1:
+                raise ValueError(
+                    f"tenants mix incremental and atomic engines: {modes}")
+            incremental = next(iter(modes.values()))
+        else:
+            wrong = [tid for tid, m in modes.items()
+                     if m != bool(incremental)]
+            if wrong:
+                raise ValueError(
+                    f"incremental={incremental!r} but tenants {wrong} were "
+                    f"built with the opposite mode")
+        self.incremental = bool(incremental)
         for tid, engine in self._tenants.items():
             if engine.governor is not None:
                 raise ValueError(f"tenant {tid!r}: engine already governed")
@@ -165,6 +199,9 @@ class FleetEngine:
         # Work granted (prepare issued) but swap not yet applied.
         self._granted: Dict[str, Deque[int]] = {
             tid: collections.deque() for tid in self._tenants}
+        # Units held by in-flight incremental migrations (granted via
+        # may_begin, released on migration completion).
+        self._held: Dict[str, int] = {tid: 0 for tid in self._tenants}
         # Packed decision plane for run_batched; built lazily on first use
         # and maintained incrementally from then on (tenant attach/detach
         # plus per-tenant state events), never rebuilt per tick.
@@ -198,11 +235,17 @@ class FleetEngine:
             raise ValueError(f"tenant {tenant_id!r}: engine already governed")
         if engine._started:
             raise ValueError(f"tenant {tenant_id!r}: engine already started")
+        if engine.incremental != self.incremental:
+            raise ValueError(
+                f"tenant {tenant_id!r}: engine incremental="
+                f"{engine.incremental} but the fleet runs "
+                f"incremental={self.incremental}")
         engine.governor = _TenantGovernor(self, tenant_id)
         self._tenants[tenant_id] = engine
         self._front_deferred[tenant_id] = False
         self._waiting_count[tenant_id] = 0
         self._granted[tenant_id] = collections.deque()
+        self._held[tenant_id] = 0
         if self._fleet_matrix is not None:
             self._fleet_matrix.attach(tenant_id,
                                       self._batchable_matrix(tenant_id))
@@ -221,6 +264,10 @@ class FleetEngine:
             self._waiting = collections.deque(
                 (t, s) for t, s in self._waiting if t != tenant_id)
         for _ in self._granted.pop(tenant_id):
+            self.scheduler.release(tenant_id)
+        for _ in range(self._held.pop(tenant_id, 0)):
+            # An in-flight migration's unit goes back to the pool; the
+            # detached engine keeps migrating under its own local budget.
             self.scheduler.release(tenant_id)
         self._front_deferred.pop(tenant_id)
         if self._fleet_matrix is not None:
@@ -243,12 +290,21 @@ class FleetEngine:
         return False
 
     def _may_apply(self, tid: str, engine: LayoutEngine,
-                   state_id: int) -> bool:
-        """May this tenant's front (due) swap take effect at this step?"""
+                   state_id: int, hold: bool = False) -> bool:
+        """May this tenant's front (due) swap take effect at this step?
+
+        ``hold=True`` (incremental mode) keeps the granted unit instead of
+        releasing it: the migration about to begin holds it until
+        :meth:`_on_complete`.  An evicted target releases immediately —
+        no migration will begin for it.
+        """
         granted = self._granted[tid]
         if granted and granted[0] == state_id:
             granted.popleft()
-            self.scheduler.release(tid)
+            if hold and engine.backend.has(state_id):
+                self._held[tid] += 1
+            else:
+                self.scheduler.release(tid)
             self._front_deferred[tid] = False
             return True
         if not engine.backend.has(state_id):
@@ -266,6 +322,19 @@ class FleetEngine:
             self._front_deferred[tid] = True
             self.swaps_deferred += 1
         return False
+
+    def _on_complete(self, tid: str) -> None:
+        """A tenant's incremental migration finished: release its unit."""
+        if self._held.get(tid, 0) > 0:
+            self._held[tid] -= 1
+            self.scheduler.release(tid)
+
+    def _grant_rows(self, tid: str, want: int) -> int:
+        """Per-tick row budget for a tenant's in-flight migration."""
+        grant = getattr(self.scheduler, "grant_rows", None)
+        if grant is None:
+            return want
+        return grant(tid, want)
 
     def _pump(self) -> None:
         """Grant waiting physical work, FIFO, as the scheduler allows."""
@@ -285,7 +354,10 @@ class FleetEngine:
                 continue
             self._waiting_count[tid] -= 1
             self._granted[tid].append(sid)
-            engine.backend.prepare(sid)
+            if not engine.incremental:
+                # Incremental engines never pre-materialize: rows move at
+                # apply time, a micro-batch per tick (see _apply_due_swaps).
+                engine.backend.prepare(sid)
         self._waiting = keep
 
     # ------------------------------------------------------------------

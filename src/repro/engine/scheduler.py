@@ -39,6 +39,15 @@ class ReorgScheduler(Protocol):
       one is still waiting.
     * :meth:`release` returns a granted unit once the swap has taken
       effect (or the target state was evicted and the swap skipped).
+      Under an *incremental* fleet (see :mod:`repro.engine.reorg`) the
+      unit is instead held for the whole migration — from the step its
+      moves begin until the step the target layout takes over — so
+      e.g. :class:`KConcurrentScheduler` bounds concurrent migrations.
+    * :meth:`grant_rows` turns the grant into a *row budget*: an engine
+      holding a granted unit asks, each tick, how many rows its in-flight
+      migration may move now.  The default (and the behavior of every
+      scheduler without a tighter rule) is to grant the full request, so
+      atomic semantics — swap permission only — are the degenerate case.
     """
 
     name: str
@@ -48,6 +57,8 @@ class ReorgScheduler(Protocol):
     def try_acquire(self, tenant_id: str) -> bool: ...
 
     def release(self, tenant_id: str) -> None: ...
+
+    def grant_rows(self, tenant_id: str, want: int) -> int: ...
 
 
 class _StatsMixin:
@@ -100,6 +111,9 @@ class UnlimitedScheduler(_StatsMixin):
     def release(self, tenant_id: str) -> None:
         pass
 
+    def grant_rows(self, tenant_id: str, want: int) -> int:
+        return want
+
 
 class KConcurrentScheduler(_StatsMixin):
     """At most ``k`` reorganizations in flight fleet-wide.
@@ -130,6 +144,11 @@ class KConcurrentScheduler(_StatsMixin):
         if self.in_flight > 0:
             self.in_flight -= 1
 
+    def grant_rows(self, tenant_id: str, want: int) -> int:
+        # Concurrency is this scheduler's budget axis: a migration holding
+        # one of the k units moves as fast as its engine allows.
+        return want
+
 
 class TokenBucketScheduler(_StatsMixin):
     """Token-bucket reorganization budget.
@@ -138,16 +157,30 @@ class TokenBucketScheduler(_StatsMixin):
     reorganization consumes one whole token.  ``rate=0`` with an initial
     burst models a fixed budget; fractional rates model "one reorg every
     1/rate queries fleet-wide".
+
+    With ``rows_per_token`` set, the bucket is denominated in *rows* for
+    incremental fleets (see :mod:`repro.engine.reorg`): admission is free
+    (:meth:`try_acquire` always grants, so migrations *start* on their
+    Δ-due step) and :meth:`grant_rows` meters how many rows may move per
+    tick — one token buys ``rows_per_token`` rows, so the bucket models a
+    shared maintenance bandwidth of ``rate * rows_per_token`` rows/tick
+    instead of "one wholesale swap every 1/rate ticks".
     """
 
     def __init__(self, rate: float, capacity: float,
-                 initial: float | None = None):
+                 initial: float | None = None,
+                 rows_per_token: float | None = None):
         if rate < 0 or capacity < 0:
             raise ValueError("rate and capacity must be >= 0")
+        if rows_per_token is not None and rows_per_token <= 0:
+            raise ValueError("rows_per_token must be positive (None = "
+                             "swap-permission mode)")
         self.rate = float(rate)
         self.capacity = float(capacity)
         self.tokens = float(capacity if initial is None else initial)
-        self.name = f"bucket{rate:g}x{capacity:g}"
+        self.rows_per_token = rows_per_token
+        self.name = (f"bucket{rate:g}x{capacity:g}" if rows_per_token is None
+                     else f"bucket{rate:g}x{capacity:g}rows{rows_per_token:g}")
         self._now = 0
         self._init_stats()
 
@@ -157,6 +190,9 @@ class TokenBucketScheduler(_StatsMixin):
         self.tokens = min(self.capacity, self.tokens + self.rate * elapsed)
 
     def try_acquire(self, tenant_id: str) -> bool:
+        if self.rows_per_token is not None:
+            # Row-denominated bucket: pacing happens in grant_rows.
+            return self._count(True)
         if self.tokens >= 1.0:
             self.tokens -= 1.0
             return self._count(True)
@@ -164,3 +200,11 @@ class TokenBucketScheduler(_StatsMixin):
 
     def release(self, tenant_id: str) -> None:
         pass
+
+    def grant_rows(self, tenant_id: str, want: int) -> int:
+        if self.rows_per_token is None:
+            return want
+        granted = min(int(want), int(self.tokens * self.rows_per_token))
+        if granted > 0:
+            self.tokens -= granted / self.rows_per_token
+        return granted

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: score all (state, partition) move candidates at once.
+
+The micro-move planner (:mod:`repro.engine.reorg.planner`) orders a
+migration's moves by estimated skipping-benefit-per-row under the recent
+query distribution.  The expensive part is the per-partition *scan
+frequency*: for every partition of every involved layout state, the
+fraction of the Q recent queries whose predicates cannot skip it.  That is
+a (Q, S, P, C) interval-overlap AND-reduction followed by a mean over
+queries — this kernel fuses it into one launch over the packed
+``(S, P, C)`` bounds plane:
+
+  grid = (S, P/BP); each program holds the full (Q, C) query sample (the
+  recent window is small — it rides along every program) and one
+  (1, BP, C) bounds tile in VMEM, accumulates the (Q, BP) overlap AND
+  over column chunks, then reduces the query axis to the (1, BP) mean, so
+  the (Q, S, P, C) broadcast tensor never materializes.
+
+Like the sibling pruning/fleet_scan kernels this is VPU-bound and
+memory-bound (~C flops/byte over metadata); block sizes keep the working
+set (2*Q*C + 2*BP*C + Q*BP floats) well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BP = 128
+
+
+def _kernel(qlo_ref, qhi_ref, pmin_ref, pmax_ref, out_ref, *, col_chunk):
+    qlo = qlo_ref[...]            # (Q, C)
+    qhi = qhi_ref[...]
+    pmin = pmin_ref[...]          # (1, BP, C)
+    pmax = pmax_ref[...]
+    q, c = qlo.shape
+    bp = pmin.shape[1]
+    acc = jnp.ones((q, bp), jnp.float32)
+    n_chunks = pl.cdiv(c, col_chunk)
+    for i in range(n_chunks):
+        lo = i * col_chunk
+        width = min(col_chunk, c - lo)
+        ql = jax.lax.dynamic_slice(qlo, (0, lo), (q, width))
+        qh = jax.lax.dynamic_slice(qhi, (0, lo), (q, width))
+        pn = jax.lax.dynamic_slice(pmin, (0, 0, lo), (1, bp, width))
+        px = jax.lax.dynamic_slice(pmax, (0, 0, lo), (1, bp, width))
+        ov = ((pn[0][None, :, :] <= qh[:, None, :])
+              & (px[0][None, :, :] >= ql[:, None, :]))
+        acc = acc * ov.all(axis=-1).astype(jnp.float32)
+    out_ref[...] = jnp.mean(acc, axis=0, keepdims=True)   # (1, BP)
+
+
+def move_scores_pallas(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                       p_max: jax.Array, bp: int = DEFAULT_BP,
+                       col_chunk: int = 8,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """(Q, C) queries x (S, P, C) bounds -> (S, P) float32 scan frequency.
+
+    ``out[s, p]`` is the fraction of queries scanning partition p of state
+    s.  ``interpret=None`` auto-selects: the compiled kernel when JAX has
+    an accelerator backend (TPU/GPU), the Pallas interpreter on CPU-only
+    hosts.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _move_scores_call(q_lo, q_hi, p_min, p_max, bp=bp,
+                             col_chunk=col_chunk, interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "col_chunk", "interpret"))
+def _move_scores_call(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                      p_max: jax.Array, bp: int, col_chunk: int,
+                      interpret: bool) -> jax.Array:
+    S, P, C = p_min.shape
+    bp = min(bp, P)
+    pad_p = (-P) % bp
+    if pad_p:
+        # Padded partition slots get empty bounds ([1, 0] per column):
+        # never scanned for any query, and sliced away below either way.
+        p_min = jnp.pad(p_min, ((0, 0), (0, pad_p), (0, 0)),
+                        constant_values=1.0)
+        p_max = jnp.pad(p_max, ((0, 0), (0, pad_p), (0, 0)),
+                        constant_values=0.0)
+    Pp = P + pad_p
+    grid = (S, Pp // bp)
+    Q = q_lo.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_kernel, col_chunk=col_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q, C), lambda s, j: (0, 0)),
+            pl.BlockSpec((Q, C), lambda s, j: (0, 0)),
+            pl.BlockSpec((1, bp, C), lambda s, j: (s, j, 0)),
+            pl.BlockSpec((1, bp, C), lambda s, j: (s, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda s, j: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((S, Pp), jnp.float32),
+        interpret=interpret,
+    )(q_lo, q_hi, p_min, p_max)
+    return out[:, :P]

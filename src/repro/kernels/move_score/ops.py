@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the move-score kernel.
+
+Dispatches to the Pallas kernel on accelerator backends (compiled) /
+interpret mode on CPU, and to the jnp oracle when the kernel is bypassed.
+The benefit *combination* (block-row weighting of the frequencies) lives
+in one place only — :func:`repro.engine.reorg.planner.plan_migration` —
+so the ordering formula cannot drift between implementations.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.move_score import move_score, ref
+
+
+def move_scan_frequencies(q_lo, q_hi, p_min, p_max, use_kernel: bool = True,
+                          **block_kw) -> jax.Array:
+    """(Q, C) x (S, P, C) -> (S, P) per-partition scan frequencies."""
+    if not use_kernel:
+        return ref.move_scores(q_lo, q_hi, p_min, p_max)
+    return move_score.move_scores_pallas(q_lo, q_hi, p_min, p_max,
+                                         **block_kw)

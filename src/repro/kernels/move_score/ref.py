@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the move-score kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def move_scores(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                p_max: jax.Array) -> jax.Array:
+    """(Q, C) x (S, P, C) -> (S, P) float32 per-partition scan frequency.
+
+    ``out[s, p]`` is the fraction of the Q queries that must scan
+    partition p of state s — the quantity the micro-move planner turns
+    into a benefit-per-row-moved ordering.
+    """
+    ov = ((p_min[None] <= q_hi[:, None, None, :])
+          & (p_max[None] >= q_lo[:, None, None, :]))      # (Q, S, P, C)
+    return ov.all(axis=-1).astype(jnp.float32).mean(axis=0)

@@ -9,6 +9,8 @@ from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.fleet_scan import fleet_scan, ops as fleet_ops
 from repro.kernels.fleet_scan import ref as fleet_ref
+from repro.kernels.move_score import move_score, ops as move_ops
+from repro.kernels.move_score import ref as move_ref
 from repro.kernels.pruning import pruning, ref as prune_ref
 from repro.kernels.zorder import ref as z_ref, zorder
 
@@ -199,6 +201,84 @@ def test_fleet_ops_wrapper_dispatches():
                                       use_kernel=False)
     np.testing.assert_array_equal(np.asarray(via_kernel),
                                   np.asarray(via_oracle))
+
+
+# ---------------------------------------------------------------------------
+# move_score kernel (per-partition scan frequencies for the reorg planner)
+# ---------------------------------------------------------------------------
+
+def _move_case(Q, S, P, C, seed):
+    rng = np.random.default_rng(seed)
+    p_min = rng.uniform(0, 1, (S, P, C)).astype(np.float32)
+    p_max = p_min + rng.uniform(0, 0.5, (S, P, C)).astype(np.float32)
+    q_lo = rng.uniform(0, 1, (Q, C)).astype(np.float32)
+    q_hi = q_lo + rng.uniform(0, 0.5, (Q, C)).astype(np.float32)
+    return q_lo, q_hi, p_min, p_max
+
+
+@pytest.mark.parametrize("Q,S,P,C", [(8, 2, 16, 4), (32, 2, 64, 8),
+                                     (13, 3, 37, 5), (1, 2, 5, 1),
+                                     (64, 4, 130, 7)])
+def test_move_score_matches_ref(Q, S, P, C):
+    q_lo, q_hi, p_min, p_max = _move_case(Q, S, P, C, Q * 1000 + P)
+    got = move_score.move_scores_pallas(q_lo, q_hi, p_min, p_max,
+                                        interpret=True)
+    want = move_ref.move_scores(q_lo, q_hi, p_min, p_max)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("Q,S,P,C,bp,col_chunk", [
+    (16, 2, 130, 7, 128, 8),    # P ragged vs the block size
+    (9, 3, 33, 5, 16, 2),       # ragged everywhere, C % col_chunk != 0
+    (24, 2, 64, 9, 32, 4),      # C not a multiple of col_chunk
+    (3, 1, 3, 1, 8, 8),         # tiny: blocks clamp to the problem size
+    (16, 2, 128, 8, 128, 8),    # exact multiples (no padding at all)
+])
+def test_move_score_ragged_padding_parity(Q, S, P, C, bp, col_chunk):
+    """Kernel == jnp oracle on every ragged P/C padding edge, with
+    interpret auto-selected (None -> interpreter on CPU-only hosts)."""
+    q_lo, q_hi, p_min, p_max = _move_case(Q, S, P, C, Q * 7919 + P * 31 + C)
+    got = move_score.move_scores_pallas(q_lo, q_hi, p_min, p_max, bp=bp,
+                                        col_chunk=col_chunk, interpret=None)
+    want = move_ref.move_scores(q_lo, q_hi, p_min, p_max)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_move_score_agrees_with_planner_numpy_path():
+    """Kernel frequencies == the planner's exact numpy scan frequencies
+    (on float32-representable bounds)."""
+    from repro.core import layouts as core_layouts
+    from repro.engine.reorg.planner import scan_frequencies
+    rng = np.random.default_rng(21)
+    P, C, Q = 24, 4, 30
+    metas = []
+    for _ in range(2):
+        mins = rng.uniform(0, 100, (P, C)).astype(np.float32).astype(
+            np.float64)
+        maxs = mins + rng.uniform(0, 30, (P, C)).astype(np.float32).astype(
+            np.float64)
+        rows = rng.integers(10, 100, P).astype(np.float64)
+        metas.append(core_layouts.PartitionMetadata(mins=mins, maxs=maxs,
+                                                    rows=rows))
+    q_lo = rng.uniform(0, 100, (Q, C)).astype(np.float32).astype(np.float64)
+    q_hi = q_lo + 20.0
+    exact = scan_frequencies(metas, q_lo, q_hi, compute="numpy")
+    kernel = scan_frequencies(metas, q_lo, q_hi, compute="pallas")
+    for a, b in zip(exact, kernel):
+        np.testing.assert_allclose(b, a, rtol=1e-6, atol=1e-7)
+
+
+def test_move_ops_wrapper_dispatches():
+    q_lo, q_hi, p_min, p_max = _move_case(12, 2, 20, 3, 7)
+    via_kernel = move_ops.move_scan_frequencies(q_lo, q_hi, p_min, p_max,
+                                                use_kernel=True,
+                                                interpret=True)
+    via_oracle = move_ops.move_scan_frequencies(q_lo, q_hi, p_min, p_max,
+                                                use_kernel=False)
+    np.testing.assert_allclose(np.asarray(via_kernel),
+                               np.asarray(via_oracle), rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -243,3 +243,144 @@ def test_layout_manager_cost_vector_cache_invalidates(seed, extra_queries):
     else:
         # sample unchanged -> cached arrays reused verbatim
         assert all(second[i] is first[i] for i in mgr.store)
+
+
+# ---------------------------------------------------------------------------
+# Incremental reorganization plane invariants
+# ---------------------------------------------------------------------------
+
+def _migration_fixture(seed, rows, partitions, num_queries):
+    from repro.core import build_default_layout, make_generator
+    from repro.core import workload as wl
+    from repro.engine.reorg.planner import plan_migration
+
+    rng = np.random.default_rng(seed)
+    data = rng.uniform(0, 100, size=(rows, 3))
+    queries = []
+    for _ in range(num_queries):
+        lo = np.full(3, -np.inf)
+        hi = np.full(3, np.inf)
+        col = int(rng.integers(3))
+        lo[col] = rng.uniform(0, 80)
+        hi[col] = lo[col] + rng.uniform(1, 30)
+        queries.append(wl.Query(lo=lo, hi=hi))
+    src = build_default_layout(0, data, partitions, sort_col=0)
+    tgt = make_generator("qdtree")(1, data, queries or [wl.Query(
+        lo=np.full(3, -np.inf), hi=np.full(3, np.inf))], partitions)
+    plan = plan_migration(data, src, tgt, queries)
+    return data, src, tgt, queries, plan
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       rows=st.integers(200, 1500),
+       partitions=st.integers(2, 10),
+       num_queries=st.integers(0, 12))
+def test_planner_moves_are_permutation_of_diff(seed, rows, partitions,
+                                               num_queries):
+    """(c) The planner's move order is a permutation of the layout diff:
+    every non-empty target partition whose row set differs from the
+    source appears exactly once, identical partitions never appear."""
+    from repro.engine.reorg.planner import plan_is_permutation_of_diff
+
+    _, _, _, _, plan = _migration_fixture(seed, rows, partitions,
+                                          num_queries)
+    assert plan_is_permutation_of_diff(plan)
+    assert plan.total_move_rows == sum(m.rows for m in plan.moves)
+    moved = [m.target_partition for m in plan.moves]
+    assert len(moved) == len(set(moved))
+    assert not (set(moved) & set(plan.identical))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       alpha=st.floats(0.01, 500.0),
+       rows=st.integers(200, 1200),
+       partitions=st.integers(2, 8),
+       batches=st.integers(1, 9))
+def test_cumulative_incremental_charge_equals_alpha(seed, alpha, rows,
+                                                    partitions, batches):
+    """(a) Summing a completed migration's charge schedule left to right
+    lands bitwise on the atomic α charge, for any batch split."""
+    from repro.engine.reorg.executor import MigrationRecord
+
+    _, _, _, _, plan = _migration_fixture(seed, rows, partitions, 4)
+    record = MigrationRecord(target_state=1, charged_at=0, begun_at=0,
+                             alpha=alpha,
+                             total_rows=plan.total_move_rows,
+                             moves_total=plan.num_moves)
+    moves = list(plan.moves)
+    rng = np.random.default_rng(seed)
+    cuts = sorted(rng.integers(0, len(moves) + 1, size=batches - 1).tolist())
+    groups = [moves[a:b] for a, b in
+              zip([0] + cuts, cuts + [len(moves)])]
+    for k, group in enumerate(groups):
+        moved = sum(m.rows for m in group)
+        record.moved_rows += moved
+        record.charge(index=k, rows=moved,
+                      completing=(k == len(groups) - 1))
+    # the consumer's left-to-right float sum is exactly alpha
+    total = 0.0
+    for _, _, charge in record.charges:
+        total = total + charge
+    assert total == alpha
+    assert record.charged == alpha
+    # charges are proportional to rows moved until the closing one
+    assert all(rows_k >= 0 for _, rows_k, _ in record.charges)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       rows=st.integers(300, 1500),
+       partitions=st.integers(2, 8),
+       done_seed=st.integers(0, 1000))
+def test_hybrid_serve_cost_envelope(seed, rows, partitions, done_seed):
+    """(b) For every query, the hybrid serve cost is bounded by the
+    per-row mixture of the pure layouts: moved rows cost exactly their
+    pure-target cost, unmoved rows at most their pure-source cost (their
+    residual bounds only ever shrink), so
+
+        moved_target_cost <= hybrid <= moved_target_cost + unmoved_source_cost
+
+    with both endpoints reached (no moves -> pure source; all moves ->
+    pure target, tested bitwise).  The naive "between source and target
+    totals" claim is genuinely false for zone maps — a residual partition
+    can straddle a query that both pure layouts skip — which is why the
+    envelope is stated per row set.
+    """
+    from repro.core import layouts as L
+    from repro.core import workload as wl
+
+    data, src, tgt, queries, plan = _migration_fixture(seed, rows,
+                                                       partitions, 6)
+    if not queries:
+        queries = [wl.Query(lo=np.full(3, -np.inf),
+                            hi=np.full(3, np.inf))]
+    rng = np.random.default_rng(done_seed)
+    done = np.zeros(plan.num_target_partitions, dtype=bool)
+    for m in plan.moves:
+        if rng.uniform() < 0.5:
+            done[m.target_partition] = True
+    hybrid = plan.hybrid_meta(done)
+    src_meta = src.materialize(data)
+    tgt_meta = plan.target_meta
+    total = max(len(data), 1)
+    moved_rows = done[plan.target_assignment]
+    for q in queries:
+        c_h = float(L.eval_cost(hybrid, q.lo, q.hi))
+        scan_s = L.partitions_scanned(src_meta, q.lo, q.hi)
+        scan_t = L.partitions_scanned(tgt_meta, q.lo, q.hi)
+        per_row_s = scan_s[plan.source_assignment]
+        per_row_t = scan_t[plan.target_assignment]
+        lower = per_row_t[moved_rows].sum() / total
+        upper = (per_row_t[moved_rows].sum()
+                 + per_row_s[~moved_rows].sum()) / total
+        assert lower - 1e-12 <= c_h <= upper + 1e-12
+    # endpoints, bitwise
+    q_lo, q_hi = wl.stack_queries(queries)
+    none = plan.hybrid_meta(np.zeros_like(done))
+    full = plan.hybrid_meta(np.ones_like(done))
+    assert np.array_equal(L.eval_cost(none, q_lo, q_hi),
+                          L.eval_cost(src_meta, q_lo, q_hi))
+    assert np.array_equal(L.eval_cost(full, q_lo, q_hi),
+                          L.eval_cost(tgt_meta, q_lo, q_hi))

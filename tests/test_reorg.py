@@ -1,0 +1,503 @@
+"""Tests for the incremental reorganization plane: micro-move planning,
+budgeted execution with exact α-charge amortization, hybrid-layout
+serving on both backends, golden incremental-vs-atomic identity across
+every drift scenario x scheduler, and the skip-aware
+PartitionStore.reorganize."""
+import numpy as np
+import pytest
+
+from repro.core import (OreoConfig, build_default_layout, layouts,
+                        make_generator, make_templates, workload as wl)
+from repro.core import layout_manager as lm
+from repro.core.workload import make_drift_scenario
+from repro.data.partition_store import PartitionStore
+from repro.engine import (DiskBackend, FleetEngine, InMemoryBackend,
+                          KConcurrentScheduler, LayoutEngine, OreoPolicy,
+                          TokenBucketScheduler, UnlimitedScheduler,
+                          plan_migration)
+from repro.engine.reorg.executor import closing_increment
+from repro.engine.reorg.planner import plan_is_permutation_of_diff
+
+
+def clustered_layout(data, layout_id, partitions, sort_col=0):
+    return build_default_layout(layout_id, data, partitions,
+                                sort_col=sort_col)
+
+
+def qdtree_layout(data, layout_id, partitions, queries):
+    return make_generator("qdtree")(layout_id, data, queries, partitions)
+
+
+def random_queries(rng, col_lo, col_hi, n, bounded=2):
+    tmpl = make_templates(1, col_lo.shape[0], rng,
+                          cols_per_template=(bounded, bounded))[0]
+    return [tmpl.sample(rng, col_lo, col_hi) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+def test_plan_is_permutation_of_layout_diff():
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0, 100, size=(2000, 4))
+    src = clustered_layout(data, 0, 8, sort_col=0)
+    tgt = clustered_layout(data, 1, 8, sort_col=1)
+    plan = plan_migration(data, src, tgt,
+                          random_queries(rng, data.min(0), data.max(0), 16))
+    assert plan_is_permutation_of_diff(plan)
+    moved = {m.target_partition for m in plan.moves}
+    assert len(moved) == len(plan.moves)          # no duplicates
+    assert plan.total_move_rows == sum(m.rows for m in plan.moves)
+
+
+def test_plan_identical_layouts_has_no_moves():
+    rng = np.random.default_rng(1)
+    data = rng.uniform(0, 100, size=(1200, 3))
+    src = clustered_layout(data, 0, 6, sort_col=2)
+    tgt = clustered_layout(data, 1, 6, sort_col=2)     # same row sets
+    plan = plan_migration(data, src, tgt)
+    assert plan.moves == []
+    assert plan.total_move_rows == 0
+    assert set(plan.identical) == set(range(6))
+    assert plan_is_permutation_of_diff(plan)
+
+
+def test_plan_partial_overlap_skips_identical_partitions():
+    """Identity is by *content*, not by label: a pure relabeling (two
+    partitions swap ids) needs no physical moves at all, while a genuine
+    content change moves exactly the affected partitions."""
+    rng = np.random.default_rng(2)
+    n, k = 2000, 8
+    data = np.sort(rng.uniform(0, 100, size=(n, 1)), axis=0)
+    src = clustered_layout(data, 0, k, sort_col=0)
+    a = src.route(data)
+
+    def layout_from(assignment, layout_id):
+        meta = layouts.metadata_from_assignment(data, assignment, k)
+        return layouts.Layout(layout_id=layout_id, name=f"t{layout_id}",
+                              technique="test", meta=meta,
+                              route=lambda rows, s=assignment: s)
+
+    # pure relabeling: the two top partitions swap ids, row sets unchanged
+    swapped = a.copy()
+    swapped[a == k - 1] = k - 2
+    swapped[a == k - 2] = k - 1
+    plan = plan_migration(data, src, layout_from(swapped, 1))
+    assert plan.moves == []
+    assert plan.identical[k - 2] == k - 1
+    assert plan.identical[k - 1] == k - 2
+    assert plan_is_permutation_of_diff(plan)
+
+    # genuine content change: the two top partitions' rows interleave
+    mixed = a.copy()
+    top = np.nonzero(a >= k - 2)[0]
+    mixed[top] = k - 2 + (np.arange(len(top)) % 2)
+    plan2 = plan_migration(data, src, layout_from(mixed, 2))
+    assert sorted(m.target_partition for m in plan2.moves) == [k - 2, k - 1]
+    assert set(plan2.identical) == set(range(k - 2))
+    assert plan_is_permutation_of_diff(plan2)
+
+
+def test_plan_greedy_order_sorted_by_benefit_per_row():
+    rng = np.random.default_rng(3)
+    data = rng.uniform(0, 100, size=(3000, 4))
+    queries = random_queries(rng, data.min(0), data.max(0), 32)
+    src = clustered_layout(data, 0, 8)
+    tgt = qdtree_layout(data, 1, 8, queries)
+    plan = plan_migration(data, src, tgt, queries)
+    per_row = [m.benefit_per_row for m in plan.moves]
+    assert per_row == sorted(per_row, reverse=True)
+
+
+def test_hybrid_meta_endpoints_match_source_and_target():
+    """No moves done -> hybrid scan costs equal the pure source layout;
+    all moves done -> equal the pure target layout (bitwise: the extra
+    empty partitions contribute exactly 0.0 to the einsum)."""
+    rng = np.random.default_rng(4)
+    data = rng.uniform(0, 100, size=(2500, 4))
+    queries = random_queries(rng, data.min(0), data.max(0), 24)
+    src = clustered_layout(data, 0, 8)
+    tgt = qdtree_layout(data, 1, 8, queries)
+    plan = plan_migration(data, src, tgt, queries)
+    src_meta = src.materialize(data)
+    none_done = plan.hybrid_meta(np.zeros(8, dtype=bool))
+    all_done = plan.hybrid_meta(np.ones(8, dtype=bool))
+    q_lo, q_hi = wl.stack_queries(queries)
+    np.testing.assert_array_equal(
+        layouts.eval_cost(none_done, q_lo, q_hi),
+        layouts.eval_cost(src_meta, q_lo, q_hi))
+    np.testing.assert_array_equal(
+        layouts.eval_cost(all_done, q_lo, q_hi),
+        layouts.eval_cost(plan.target_meta, q_lo, q_hi))
+
+
+def test_hybrid_meta_is_exact_zone_maps_of_physical_hybrid():
+    """For any done set, the hybrid metadata equals zone maps computed
+    from scratch over the physically mixed assignment."""
+    rng = np.random.default_rng(5)
+    data = rng.uniform(0, 100, size=(2000, 3))
+    queries = random_queries(rng, data.min(0), data.max(0), 16)
+    src = clustered_layout(data, 0, 6)
+    tgt = qdtree_layout(data, 1, 6, queries)
+    plan = plan_migration(data, src, tgt, queries)
+    done = np.zeros(6, dtype=bool)
+    for m in plan.moves[:len(plan.moves) // 2 + 1]:
+        done[m.target_partition] = True
+    hybrid = plan.hybrid_meta(done)
+    # ground truth: rows of done targets live at slot P_s + j, the rest
+    # stay in their source partition slot
+    a = np.where(done[plan.target_assignment],
+                 plan.num_source_partitions + plan.target_assignment,
+                 plan.source_assignment)
+    want = layouts.metadata_from_assignment(
+        data, a, plan.num_source_partitions + plan.num_target_partitions)
+    np.testing.assert_array_equal(hybrid.rows, want.rows)
+    np.testing.assert_array_equal(hybrid.mins, want.mins)
+    np.testing.assert_array_equal(hybrid.maxs, want.maxs)
+
+
+# ---------------------------------------------------------------------------
+# Golden identity: incremental(∞ budget) == atomic, everywhere
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tenant_data():
+    return {f"t{t}": np.random.default_rng(100 + t).uniform(
+        0, 100, size=(2_500, 6)) for t in range(3)}
+
+
+@pytest.fixture(scope="module")
+def bounds(tenant_data):
+    lo = np.min([d.min(0) for d in tenant_data.values()], axis=0)
+    hi = np.max([d.max(0) for d in tenant_data.values()], axis=0)
+    return lo, hi
+
+
+def oreo_engine(data, incremental=False, rows_per_tick=None, alpha=10.0,
+                delta=5, seed=2):
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=alpha, seed=seed, delta=delta,
+                     manager=lm.LayoutManagerConfig(target_partitions=8,
+                                                    window_size=60,
+                                                    gen_every=30))
+    policy = OreoPolicy(data, build_default_layout(0, data, 8), gen, cfg)
+    return LayoutEngine(policy, InMemoryBackend(data), delta=cfg.delta,
+                        incremental=incremental,
+                        rows_per_tick=rows_per_tick)
+
+
+SCHEDULERS = [
+    ("unlimited", UnlimitedScheduler),
+    ("k1", lambda: KConcurrentScheduler(1)),
+    ("bucket", lambda: TokenBucketScheduler(rate=0.01, capacity=1.0,
+                                            initial=0.0)),
+]
+
+ALL_SCENARIOS = ["sudden_shift", "gradual_drift", "cyclic_diurnal",
+                 "flash_crowd", "template_churn"]
+
+
+@pytest.mark.parametrize("scenario", ALL_SCENARIOS)
+def test_incremental_bit_identical_to_atomic(scenario, tenant_data, bounds):
+    """The acceptance gate: with an unbounded per-tick budget the
+    incremental fleet's traces — query costs, reorg indices, state
+    sequences, deferral counters, scheduler stats — are bit-identical to
+    the atomic fleet's, for every scenario under every scheduler."""
+    lo, hi = bounds
+    for _, factory in SCHEDULERS:
+        fs = make_drift_scenario(scenario, lo, hi, num_tenants=3,
+                                 queries_per_tenant=100, seed=7)
+        atomic = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                              for tid in fs.tenant_ids}, factory())
+        ra = atomic.run(fs)
+        incr = FleetEngine({tid: oreo_engine(tenant_data[tid],
+                                             incremental=True)
+                            for tid in fs.tenant_ids}, factory())
+        assert incr.incremental
+        ri = incr.run(fs)
+        for tid in fs.tenant_ids:
+            a, b = ra.per_tenant[tid], ri.per_tenant[tid]
+            assert np.array_equal(a.query_costs, b.query_costs)
+            assert a.reorg_indices == b.reorg_indices
+            assert np.array_equal(a.state_seq, b.state_seq)
+        assert ra.swaps_deferred == ri.swaps_deferred
+        assert ra.deferred_ticks == ri.deferred_ticks
+        assert ra.scheduler_stats == ri.scheduler_stats
+        # every migration completed within its begin step and charged
+        # exactly alpha
+        for tid in fs.tenant_ids:
+            ex = incr.tenant(tid).reorg_executor
+            for mig in ex.migrations:
+                assert mig.completed_at == mig.begun_at
+                assert mig.charged == mig.alpha
+
+
+def test_incremental_run_batched_identical_to_loop(tenant_data, bounds):
+    lo, hi = bounds
+    fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=3,
+                             queries_per_tenant=100, seed=3)
+    for rpt in (None, 150):
+        loop = FleetEngine({tid: oreo_engine(tenant_data[tid],
+                                             incremental=True,
+                                             rows_per_tick=rpt)
+                            for tid in fs.tenant_ids})
+        rl = loop.run(fs)
+        batched = FleetEngine({tid: oreo_engine(tenant_data[tid],
+                                                incremental=True,
+                                                rows_per_tick=rpt)
+                               for tid in fs.tenant_ids})
+        rb = batched.run_batched(fs)
+        for tid in fs.tenant_ids:
+            assert np.array_equal(rl.per_tenant[tid].query_costs,
+                                  rb.per_tenant[tid].query_costs)
+            assert np.array_equal(rl.per_tenant[tid].state_seq,
+                                  rb.per_tenant[tid].state_seq)
+
+
+def test_incremental_standalone_engine_identical_to_atomic():
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0, 100, size=(2000, 5))
+    tmpls = make_templates(2, 5, rng)
+    stream = wl.generate_workload(tmpls, data.min(0), data.max(0),
+                                  total_queries=200, seed=1,
+                                  segment_length=(60, 90))
+    ra = oreo_engine(data).run(stream)
+    rb = oreo_engine(data, incremental=True).run(stream)
+    assert np.array_equal(ra.query_costs, rb.query_costs)
+    assert ra.reorg_indices == rb.reorg_indices
+    assert np.array_equal(ra.state_seq, rb.state_seq)
+    assert ra.total_cost == rb.total_cost
+
+
+def test_disk_backend_incremental_identical_to_atomic(tmp_path):
+    rng = np.random.default_rng(1)
+    data = rng.uniform(0, 100, size=(5000, 4))
+    tmpls = make_templates(2, 4, rng)
+    stream = wl.generate_workload(tmpls, data.min(0), data.max(0),
+                                  total_queries=80, seed=2,
+                                  segment_length=(30, 50))
+
+    def run(sub, incremental, rpt=None):
+        cfg = OreoConfig(alpha=8.0, delta=6, seed=1,
+                         manager=lm.LayoutManagerConfig(
+                             target_partitions=6, window_size=30,
+                             gen_every=15))
+        backend = DiskBackend(data, str(tmp_path / sub), background=False)
+        policy = OreoPolicy(data, build_default_layout(0, data, 6),
+                            make_generator("qdtree"), cfg)
+        engine = LayoutEngine(policy, backend, delta=cfg.delta,
+                              incremental=incremental, rows_per_tick=rpt)
+        result = engine.run(stream)
+        backend.close()
+        return result, engine
+
+    ra, _ = run("atomic", False)
+    rb, _ = run("incr", True)
+    assert np.array_equal(ra.query_costs, rb.query_costs)
+    rc, engine = run("tight", True, rpt=1000)
+    # tight budget: still completes, costs may differ mid-migration but
+    # the per-query costs stay valid fractions
+    assert np.all((np.asarray(rc.query_costs) >= 0)
+                  & (np.asarray(rc.query_costs) <= 1))
+    assert all(m.charged == m.alpha
+               for m in engine.reorg_executor.migrations
+               if m.completed_at >= 0)
+
+
+# ---------------------------------------------------------------------------
+# Budgeted execution semantics
+# ---------------------------------------------------------------------------
+
+def test_tight_budget_spreads_moves_and_bounds_per_tick_rows():
+    rng = np.random.default_rng(6)
+    data = rng.uniform(0, 100, size=(2000, 5))
+    tmpls = make_templates(2, 5, rng)
+    stream = wl.generate_workload(tmpls, data.min(0), data.max(0),
+                                  total_queries=200, seed=1,
+                                  segment_length=(60, 90))
+    engine = oreo_engine(data, incremental=True, rows_per_tick=137)
+    engine.run(stream)
+    ex = engine.reorg_executor
+    completed = [m for m in ex.migrations if m.completed_at >= 0]
+    assert completed
+    for mig in completed:
+        assert mig.completed_at > mig.begun_at       # actually spread out
+        assert len(mig.charges) > 1
+        # per-step rows moved never exceed the budget... except that a
+        # single move is atomic; moves here are ~250 rows < several ticks
+        # of banked budget, so each landing step reports <= banked rows.
+        for _, rows, _ in mig.charges:
+            assert rows <= mig.total_rows
+
+
+def test_kconcurrent_holds_unit_for_whole_migration(tenant_data):
+    d = tenant_data["t0"]
+    sched = KConcurrentScheduler(1)
+    fleet = FleetEngine(
+        {"a": oreo_engine(d, incremental=True, rows_per_tick=50, delta=0,
+                          seed=5),
+         "b": oreo_engine(d, incremental=True, rows_per_tick=50, delta=0,
+                          seed=6)},
+        sched)
+    lo, hi = d.min(0), d.max(0)
+    fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=2,
+                             queries_per_tenant=150, seed=9)
+    events = [(tid, q) for tid, q in fs if tid in ("t0", "t1")]
+    renamed = [("a" if tid == "t0" else "b", q) for tid, q in events]
+    fleet.run(renamed)
+    # while any migration was in flight the single unit was held: at no
+    # point did both tenants migrate concurrently
+    ex_a = fleet.tenant("a").reorg_executor
+    ex_b = fleet.tenant("b").reorg_executor
+    spans_a = [(m.begun_at, m.completed_at) for m in ex_a.migrations
+               if m.completed_at > m.begun_at]
+    spans_b = [(m.begun_at, m.completed_at) for m in ex_b.migrations
+               if m.completed_at > m.begun_at]
+    # the scheduler unit is held exactly while a migration is in flight:
+    # whatever is still migrating at stream end still holds its unit
+    in_flight_a = sum(m.completed_at < 0 for m in ex_a.migrations)
+    in_flight_b = sum(m.completed_at < 0 for m in ex_b.migrations)
+    assert fleet._held == {"a": in_flight_a, "b": in_flight_b}
+    assert sched.in_flight == in_flight_a + in_flight_b
+    # k=1 held across whole migrations means the two tenants never both
+    # migrate at once (cross-check via completed spans on the fleet clock
+    # is impossible with per-tenant indices, but the unit accounting above
+    # plus at least one genuinely spread-out migration pins the behavior)
+    assert spans_a or spans_b                   # budgeted spans existed
+
+
+def test_token_bucket_rows_mode_meters_rows():
+    sched = TokenBucketScheduler(rate=1.0, capacity=500.0, initial=100.0,
+                                 rows_per_token=1.0)
+    assert sched.try_acquire("a")               # admission free
+    assert sched.grant_rows("a", 60) == 60
+    assert sched.grant_rows("a", 60) == 40      # bucket drained
+    assert sched.grant_rows("a", 60) == 0
+    sched.tick(1)                               # +1 token = +1 row
+    sched.tick(2)
+    assert sched.grant_rows("a", 60) == 2
+
+
+def test_rows_per_tick_requires_incremental(tenant_data):
+    with pytest.raises(ValueError, match="incremental"):
+        oreo_engine(tenant_data["t0"], incremental=False, rows_per_tick=10)
+
+
+def test_incremental_rejects_reference_backend(tenant_data):
+    d = tenant_data["t0"]
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=5.0, seed=1)
+    policy = OreoPolicy(d, build_default_layout(0, d, 8), gen, cfg)
+    with pytest.raises(ValueError, match="reference"):
+        LayoutEngine(policy, InMemoryBackend(d, compute="reference"),
+                     incremental=True)
+
+
+def test_fleet_rejects_mixed_modes(tenant_data):
+    d = tenant_data["t0"]
+    with pytest.raises(ValueError, match="mix"):
+        FleetEngine({"a": oreo_engine(d), "b": oreo_engine(d,
+                                                           incremental=True)})
+    with pytest.raises(ValueError, match="opposite"):
+        FleetEngine({"a": oreo_engine(d)}, incremental=True)
+    fleet = FleetEngine({"a": oreo_engine(d, incremental=True)})
+    with pytest.raises(ValueError, match="incremental"):
+        fleet.add_tenant("b", oreo_engine(d))
+
+
+def test_incremental_run_rejects_batch_serve(tenant_data):
+    engine = oreo_engine(tenant_data["t0"], incremental=True)
+    with pytest.raises(ValueError, match="batch_serve"):
+        engine.run([], batch_serve=True)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid serving through the metadata plane
+# ---------------------------------------------------------------------------
+
+def test_hybrid_serving_updates_shadow_through_listener_events(tenant_data):
+    """Mid-migration the backend's SERVING_SHADOW carries the hybrid zone
+    maps (so estimates, serve fusion and FleetMatrix mirrors all see the
+    hybrid state), and serve() equals eval_cost over the hybrid meta."""
+    rng = np.random.default_rng(8)
+    d = tenant_data["t0"]
+    engine = oreo_engine(d, incremental=True, rows_per_tick=120, delta=0,
+                         alpha=2.0)
+    backend = engine.backend
+    tmpls = make_templates(2, 6, rng)
+    stream = wl.generate_workload(tmpls, d.min(0), d.max(0),
+                                  total_queries=300, seed=4,
+                                  segment_length=(80, 120))
+    saw_hybrid = 0
+    for q in stream:
+        engine.step(q)
+        ex = engine.reorg_executor
+        if ex.active is not None and ex.done_mask is not None \
+                and ex.done_mask.any():
+            saw_hybrid += 1
+            plan = ex._active
+            hybrid = plan.hybrid_meta(ex.done_mask)
+            want = float(layouts.eval_cost(hybrid, q.lo, q.hi))
+            shadow = backend.state_matrix.metadata(
+                InMemoryBackend.SERVING_SHADOW)
+            np.testing.assert_array_equal(shadow.rows, hybrid.rows)
+            got = backend.serve(q)
+            assert got == want
+    assert saw_hybrid > 0, "budget never left a migration in flight"
+
+
+def test_partition_store_reorganize_skips_identical(tmp_path):
+    rng = np.random.default_rng(9)
+    data = rng.uniform(0, 100, (3000, 4))
+    store = PartitionStore(str(tmp_path / "tbl"))
+    store.write(data, build_default_layout(0, data, 6))
+    stats = store.reorganize(build_default_layout(1, data, 6))
+    assert stats.partitions_skipped == 6
+    assert stats.partitions_rewritten == 0
+    assert stats.rows_rewritten == 0
+    stats2 = store.reorganize(build_default_layout(2, data, 6, sort_col=1))
+    assert stats2.partitions_rewritten > 0
+    assert stats2.partitions_rewritten + stats2.partitions_skipped == 6
+    # scans stay correct after the carried-over files
+    tmpl = make_templates(1, 4, rng)[0]
+    q = tmpl.sample(rng, data.min(0), data.max(0))
+    rows, _ = store.scan(q)
+    mask = ((data >= q.lo[None]) & (data <= q.hi[None])).all(axis=1)
+    assert len(rows) == mask.sum()
+    assert float(stats) == stats.seconds
+
+
+def test_partition_store_reorganize_into_more_partitions(tmp_path):
+    """Regression: growing the partition count must not try to carry over
+    files that never existed — an added *empty* partition compares equal
+    to a missing old partition but has no file to copy."""
+    rng = np.random.default_rng(10)
+    data = rng.uniform(0, 100, (1000, 3))
+    store = PartitionStore(str(tmp_path / "tbl"))
+    store.write(data, build_default_layout(0, data, 4))
+    wide = build_default_layout(1, data, 8)
+    # force partition 7 empty: route everything into 0..6
+    route = wide.route
+
+    def squeezed(rows):
+        return np.minimum(route(rows), 6)
+
+    squeezed_layout = layouts.Layout(
+        layout_id=1, name="squeezed", technique="test",
+        meta=layouts.metadata_from_assignment(data, squeezed(data), 8),
+        route=squeezed)
+    stats = store.reorganize(squeezed_layout)
+    assert stats.partitions_rewritten + stats.partitions_skipped == 8
+    meta = store.metadata()
+    assert meta.num_partitions == 8 and meta.rows[7] == 0
+    rows, _ = store.scan(wl.Query(lo=data.min(0), hi=data.max(0)))
+    assert len(rows) == len(data)
+
+
+def test_closing_increment_lands_bitwise():
+    for charged, alpha in [(0.0, 8.0), (7.9999999999999, 8.0),
+                           (2.6666666666666665, 8.0), (0.1, 1.0),
+                           (1e-30, 1.0), (9.000000000000002, 9.0)]:
+        inc = closing_increment(charged, alpha)
+        assert charged + inc == alpha
