@@ -7,7 +7,8 @@ BENCH_DIR ?= .bench
 
 .PHONY: test test-kernels lint bench bench-full bench-smoke bench-gate \
         bench-fleet-smoke bench-fleet-gate bench-reorg-smoke \
-        bench-reorg-gate quickstart install
+        bench-reorg-gate bench-ingest-smoke bench-ingest-gate \
+        quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -35,6 +36,7 @@ bench-full:
 	$(PYTHON) benchmarks/bench_decision_loop.py --out $(BENCH_DIR)/BENCH_decision_loop.json
 	$(PYTHON) benchmarks/bench_fleet.py --out $(BENCH_DIR)/BENCH_fleet.json
 	$(PYTHON) benchmarks/bench_reorg.py --out $(BENCH_DIR)/BENCH_reorg.json
+	$(PYTHON) benchmarks/bench_ingest.py --out $(BENCH_DIR)/BENCH_ingest.json
 
 bench-smoke:
 	mkdir -p $(BENCH_DIR)
@@ -56,6 +58,13 @@ bench-reorg-smoke:
 
 bench-reorg-gate: bench-reorg-smoke
 	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_reorg_smoke.json --baseline BENCH_reorg.json
+
+bench-ingest-smoke:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_ingest.py --smoke --out $(BENCH_DIR)/bench_ingest_smoke.json
+
+bench-ingest-gate: bench-ingest-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_ingest_smoke.json --baseline BENCH_ingest.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -13,7 +13,12 @@ benchmark families:
   query+reorg cost of atomic-deferred migration divided by incremental
   migration under the same maintenance budget (section
   ``cost_ratio_atomic_over_incremental``; ratio > 1 means the
-  incremental plane is paying off).
+  incremental plane is paying off);
+* ``bench_ingest.py --smoke`` vs ``BENCH_ingest.json`` — the combined
+  query+reorg cost of the never-recluster and always-recluster arms
+  divided by the clustering-debt-aware arm over the ingest scenarios
+  (section ``cost_ratio_vs_debt_aware``; ratio > 1 means the debt-aware
+  compaction policy is paying off).
 
 Raw queries/sec are not comparable across machines, so the gate checks
 **ratios**, both sides measured in the same process on the same runner:
@@ -46,10 +51,12 @@ import sys
 
 #: Sections holding {config_key: {mode: ratio}} grids, per family.
 SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop",
-            "cost_ratio_atomic_over_incremental")
+            "cost_ratio_atomic_over_incremental",
+            "cost_ratio_vs_debt_aware")
 #: Dedicated smoke-baseline sections a checked-in file may carry; their
 #: grids win over the top-level (full-sweep) numbers for shared keys.
-SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke", "reorg_smoke")
+SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke", "reorg_smoke",
+                  "ingest_smoke")
 
 
 def load_speedups(payload: dict, prefer_smoke: bool) -> dict:

@@ -408,6 +408,239 @@ def template_churn(col_lo: np.ndarray, col_hi: np.ndarray,
                        per_tenant)
 
 
+# ---------------------------------------------------------------------------
+# Streaming ingest scenarios (mixed read/write event streams)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IngestBatch:
+    """One append event: rows to land as an unclustered delta partition."""
+
+    rows: np.ndarray            # (N, C)
+    batch_id: int = -1
+
+    @property
+    def num_rows(self) -> int:
+        return int(len(self.rows))
+
+
+@dataclasses.dataclass
+class IngestStream:
+    """An interleaved multi-tenant stream mixing queries and appends.
+
+    ``events`` is the fleet-level arrival order of ``(tenant_id, event)``
+    pairs where an event is a :class:`Query` or an :class:`IngestBatch`;
+    ``per_tenant`` preserves each tenant's own event order (the golden
+    reference for a standalone replay of that tenant).
+    """
+
+    scenario: str
+    events: List[Tuple[str, object]]
+    per_tenant: Dict[str, List[object]]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[Tuple[str, object]]:
+        return iter(self.events)
+
+    @property
+    def tenant_ids(self) -> List[str]:
+        return list(self.per_tenant)
+
+    def tenant_queries(self, tenant_id: str) -> List[Query]:
+        return [e for e in self.per_tenant[tenant_id]
+                if isinstance(e, Query)]
+
+    def tenant_batches(self, tenant_id: str) -> List[IngestBatch]:
+        return [e for e in self.per_tenant[tenant_id]
+                if isinstance(e, IngestBatch)]
+
+    @property
+    def total_appended_rows(self) -> int:
+        return sum(e[1].num_rows for e in self.events
+                   if isinstance(e[1], IngestBatch))
+
+
+#: name -> scenario generator; populated by :func:`ingest_scenario` below.
+INGEST_SCENARIOS: Dict[str, Callable[..., IngestStream]] = {}
+
+
+def ingest_scenario(name: str):
+    """Register a named mixed read/write scenario generator."""
+    def deco(fn):
+        INGEST_SCENARIOS[name] = fn
+        fn.scenario_name = name
+        return fn
+    return deco
+
+
+def make_ingest_scenario(name: str, col_lo: np.ndarray, col_hi: np.ndarray,
+                         num_tenants: int = 3,
+                         queries_per_tenant: int = 1500,
+                         seed: int = 0, **kwargs) -> IngestStream:
+    """Instantiate a registered ingest scenario by name."""
+    if name not in INGEST_SCENARIOS:
+        raise KeyError(f"unknown ingest scenario {name!r}; "
+                       f"known: {sorted(INGEST_SCENARIOS)}")
+    return INGEST_SCENARIOS[name](
+        col_lo=col_lo, col_hi=col_hi, num_tenants=num_tenants,
+        queries_per_tenant=queries_per_tenant, seed=seed, **kwargs)
+
+
+def interleave_event_streams(per_tenant: Dict[str, List[object]],
+                             weight_fn: Optional[Callable[[str, int],
+                                                          float]] = None,
+                             ) -> List[Tuple[str, object]]:
+    """Smooth-WRR interleave of per-tenant *mixed* event lists.
+
+    Identical discipline to :func:`interleave_streams` (same credits, same
+    tie-breaking), generalized from query lists to lists that may also
+    hold :class:`IngestBatch` events.  Per-tenant event order is always
+    preserved.
+    """
+    tids = sorted(per_tenant)
+    cursors = {tid: 0 for tid in tids}
+    credits = {tid: 0.0 for tid in tids}
+    events: List[Tuple[str, object]] = []
+    total = sum(len(s) for s in per_tenant.values())
+    for _ in range(total):
+        live = [t for t in tids if cursors[t] < len(per_tenant[t])]
+        weights = {t: (weight_fn(t, cursors[t]) if weight_fn else 1.0)
+                   for t in live}
+        for t in live:
+            credits[t] += weights[t]
+        pick = max(live, key=lambda t: credits[t])
+        credits[pick] -= sum(weights.values())
+        events.append((pick, per_tenant[pick][cursors[pick]]))
+        cursors[pick] += 1
+    return events
+
+
+def _sample_batch(rng: np.random.Generator, col_lo: np.ndarray,
+                  col_hi: np.ndarray, rows: int) -> IngestBatch:
+    """Uniform rows over the full domain: maximally unclustered appends
+    (a delta partition's bounds then span whatever arrived, so queries
+    can rarely skip it — the worst case the debt meter prices)."""
+    return IngestBatch(rows=rng.uniform(col_lo, col_hi,
+                                        size=(rows, col_lo.shape[0])))
+
+
+def _weave(queries: Sequence[Query],
+           batch_after: Dict[int, List[IngestBatch]]) -> List[object]:
+    """Per-tenant event list: each query, with any batches scheduled
+    after it inserted in order (index -1 batches lead the stream)."""
+    events: List[object] = list(batch_after.get(-1, []))
+    for k, q in enumerate(queries):
+        events.append(q)
+        events.extend(batch_after.get(k, []))
+    return events
+
+
+@ingest_scenario("trickle")
+def trickle_ingest(col_lo: np.ndarray, col_hi: np.ndarray,
+                   num_tenants: int = 3, queries_per_tenant: int = 1500,
+                   seed: int = 0, every: int = 10, batch_rows: int = 40,
+                   ) -> IngestStream:
+    """Steady trickle: a small append every ``every`` queries, one stable
+    query template — the base case for debt-metered compaction."""
+    per_tenant: Dict[str, List[object]] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(1, col_lo.shape[0], rng)
+        stream = _stream_from_plan([(tmpls[0], queries_per_tenant)], tmpls,
+                                   col_lo, col_hi, rng)
+        batches = {k: [_sample_batch(rng, col_lo, col_hi, batch_rows)]
+                   for k in range(every - 1, queries_per_tenant, every)}
+        per_tenant[f"t{t}"] = _weave(stream.queries, batches)
+    return IngestStream("trickle", interleave_event_streams(per_tenant),
+                        per_tenant)
+
+
+@ingest_scenario("append_heavy")
+def append_heavy(col_lo: np.ndarray, col_hi: np.ndarray,
+                 num_tenants: int = 3, queries_per_tenant: int = 1500,
+                 seed: int = 0, every: int = 4, batch_rows: int = 80,
+                 ) -> IngestStream:
+    """Write-dominated: frequent, larger appends keep delta partitions
+    piling on faster than any single compaction clears them."""
+    per_tenant: Dict[str, List[object]] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(1, col_lo.shape[0], rng)
+        stream = _stream_from_plan([(tmpls[0], queries_per_tenant)], tmpls,
+                                   col_lo, col_hi, rng)
+        batches = {k: [_sample_batch(rng, col_lo, col_hi, batch_rows)]
+                   for k in range(every - 1, queries_per_tenant, every)}
+        per_tenant[f"t{t}"] = _weave(stream.queries, batches)
+    return IngestStream("append_heavy", interleave_event_streams(per_tenant),
+                        per_tenant)
+
+
+@ingest_scenario("mixed_rw")
+def mixed_rw(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 3,
+             queries_per_tenant: int = 1500, seed: int = 0,
+             every: int = 8, batch_rows: int = 50) -> IngestStream:
+    """Reads drift while writes trickle: a mid-stream template shift makes
+    drift reorgs and debt compactions compete for the same α budget."""
+    per_tenant: Dict[str, List[object]] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(2, col_lo.shape[0], rng)
+        shift = int(queries_per_tenant * rng.uniform(0.4, 0.6))
+        stream = _stream_from_plan(
+            [(tmpls[0], shift), (tmpls[1], queries_per_tenant - shift)],
+            tmpls, col_lo, col_hi, rng)
+        batches = {k: [_sample_batch(rng, col_lo, col_hi, batch_rows)]
+                   for k in range(every - 1, queries_per_tenant, every)}
+        per_tenant[f"t{t}"] = _weave(stream.queries, batches)
+    return IngestStream("mixed_rw", interleave_event_streams(per_tenant),
+                        per_tenant)
+
+
+@ingest_scenario("ingest_burst")
+def ingest_burst(col_lo: np.ndarray, col_hi: np.ndarray,
+                 num_tenants: int = 3, queries_per_tenant: int = 1500,
+                 seed: int = 0, burst_start: float = 0.3,
+                 burst_end: float = 0.5, every: int = 3,
+                 batch_rows: int = 100) -> IngestStream:
+    """A concentrated load window then a long read-only tail: everything
+    appended lands inside ``[burst_start, burst_end)`` of the stream."""
+    per_tenant: Dict[str, List[object]] = {}
+    lo_k = int(queries_per_tenant * burst_start)
+    hi_k = int(queries_per_tenant * burst_end)
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(1, col_lo.shape[0], rng)
+        stream = _stream_from_plan([(tmpls[0], queries_per_tenant)], tmpls,
+                                   col_lo, col_hi, rng)
+        batches = {k: [_sample_batch(rng, col_lo, col_hi, batch_rows)]
+                   for k in range(lo_k, hi_k, every)}
+        per_tenant[f"t{t}"] = _weave(stream.queries, batches)
+    return IngestStream("ingest_burst", interleave_event_streams(per_tenant),
+                        per_tenant)
+
+
+@ingest_scenario("bulk_load")
+def bulk_load(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 3,
+              queries_per_tenant: int = 1500, seed: int = 0,
+              load_rows: int = 600,
+              load_points: Tuple[float, ...] = (0.2, 0.5, 0.9),
+              ) -> IngestStream:
+    """A few large loads at fixed points — the last one near the end of
+    the stream, where eagerly reclustering can never pay for itself (the
+    case that separates debt-aware from always-recluster)."""
+    per_tenant: Dict[str, List[object]] = {}
+    for t, rng in enumerate(_scenario_rngs(seed, num_tenants)):
+        tmpls = make_templates(1, col_lo.shape[0], rng)
+        stream = _stream_from_plan([(tmpls[0], queries_per_tenant)], tmpls,
+                                   col_lo, col_hi, rng)
+        batches: Dict[int, List[IngestBatch]] = {}
+        for frac in load_points:
+            k = min(int(queries_per_tenant * frac), queries_per_tenant - 1)
+            batches.setdefault(k, []).append(
+                _sample_batch(rng, col_lo, col_hi, load_rows))
+        per_tenant[f"t{t}"] = _weave(stream.queries, batches)
+    return IngestStream("bulk_load", interleave_event_streams(per_tenant),
+                        per_tenant)
+
+
 def queried_column_histogram(queries: Sequence[Query],
                              num_columns: int) -> np.ndarray:
     """How often each column appears with a finite predicate -- used by the

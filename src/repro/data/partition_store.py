@@ -49,16 +49,25 @@ class ReorgStats:
         return self.seconds
 
 
+def manifest_dict(num_partitions: int, mins, maxs, rows,
+                  layout_name: str) -> dict:
+    """The manifest as a plain dict — the single canonical construction,
+    shared by :func:`write_manifest` and the durability WAL
+    (:mod:`repro.data.wal`), so a replayed manifest is *bitwise* the one
+    on disk."""
+    return {"num_partitions": int(num_partitions),
+            "mins": [list(m) for m in mins],
+            "maxs": [list(m) for m in maxs],
+            "rows": [int(r) for r in rows],
+            "layout": layout_name}
+
+
 def write_manifest(root: str, num_partitions: int, mins, maxs, rows,
                    layout_name: str) -> None:
     """Write a store directory's manifest — the single producer of the
     format :meth:`PartitionStore.metadata` parses, shared by full writes,
     skip-aware reorganization, and incremental migration completion."""
-    manifest = {"num_partitions": int(num_partitions),
-                "mins": [list(m) for m in mins],
-                "maxs": [list(m) for m in maxs],
-                "rows": [int(r) for r in rows],
-                "layout": layout_name}
+    manifest = manifest_dict(num_partitions, mins, maxs, rows, layout_name)
     with open(os.path.join(root, "manifest.json"), "w") as f:
         json.dump(manifest, f)
 
@@ -76,6 +85,13 @@ class PartitionStore:
 
     def __init__(self, root: str):
         self.root = root
+        # A crash mid-write/mid-reorganize leaves a fully- or partially-
+        # written "<root>.tmp" staging directory behind (the swap in
+        # _swap_in never happened, so the live directory is intact and
+        # the orphan is pure garbage): reclaim it on open.
+        orphan = root + ".tmp"
+        if os.path.isdir(orphan):
+            shutil.rmtree(orphan, ignore_errors=True)
         os.makedirs(root, exist_ok=True)
 
     def _fresh_tmp(self) -> str:

@@ -39,6 +39,18 @@ Layers:
   Charges are untouched (α at decision time, worst-case accounting
   intact); with an unbounded budget the traces are bit-identical to the
   atomic loop.
+* :mod:`repro.engine.ingest` — the streaming ingest plane:
+  ``LayoutEngine(..., ingest=IngestConfig())`` opens the write path.
+  Appended rows land as unclustered **delta partitions**
+  (:class:`DeltaLog`) visible to scans immediately; a :class:`DebtMeter`
+  prices their *clustering debt* (realized excess scan cost over a
+  hypothetical compacted table) and, past ``debt_threshold * α``, the
+  engine charges a reclustering reorganization through the same
+  α-charged, Δ-delayed, scheduler-arbitrated drift-reorg path —
+  executed as budgeted micro-moves in incremental mode.  On
+  :class:`DiskBackend`, ``durable=True`` adds a crash-safe manifest WAL
+  (:class:`repro.data.wal.ManifestWAL`) that replays interrupted
+  ingest/migration to a bitwise-identical manifest.
 * :class:`FleetMatrix` — the packed multi-tenant decision plane behind
   :meth:`FleetEngine.run_batched`: every tenant's StateMatrix stacked
   into one ``(T, S_max, P_max, C)`` tensor family, maintained
@@ -51,6 +63,7 @@ from repro.engine.compute import fleet_scan_matrix, scan_matrix
 from repro.engine.core import LayoutEngine, StepResult
 from repro.engine.fleet import FleetEngine, FleetResult, FleetStepResult
 from repro.engine.fleet_matrix import FleetMatrix
+from repro.engine.ingest import DebtMeter, DeltaBatch, DeltaLog, IngestConfig
 from repro.engine.policies import (Decision, GreedyPolicy, MTSOptimalPolicy,
                                    OfflineOptimalPolicy, OreoPolicy, Policy,
                                    RegretPolicy, StaticPolicy)
@@ -61,8 +74,9 @@ from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
 from repro.engine.state_matrix import StateMatrix
 
 __all__ = [
-    "Decision", "DiskBackend", "FleetEngine", "FleetMatrix", "FleetResult",
-    "FleetStepResult", "GreedyPolicy", "InMemoryBackend",
+    "DebtMeter", "Decision", "DeltaBatch", "DeltaLog", "DiskBackend",
+    "FleetEngine", "FleetMatrix", "FleetResult",
+    "FleetStepResult", "GreedyPolicy", "InMemoryBackend", "IngestConfig",
     "KConcurrentScheduler", "LayoutEngine", "MTSOptimalPolicy", "MicroMove",
     "MigrationPlan", "MigrationRecord", "OfflineOptimalPolicy", "OreoPolicy",
     "Policy", "RegretPolicy", "ReorgExecutor", "ReorgScheduler",

@@ -8,6 +8,7 @@ the paper's design where candidate exploration never touches row data.
 """
 from __future__ import annotations
 
+import json
 import os
 import shutil
 import threading
@@ -17,7 +18,8 @@ import numpy as np
 
 from repro.core import layouts as L
 from repro.core import workload as wl
-from repro.data.partition_store import PartitionStore, write_manifest
+from repro.data.partition_store import (PartitionStore, manifest_dict,
+                                        write_manifest)
 
 from . import compute
 from .state_matrix import StateMatrix
@@ -242,6 +244,12 @@ class InMemoryBackend(_RegistryMixin):
         self._serve_memo: Optional[tuple] = None
         self._shadow_slot: Optional[tuple] = None   # (plane version, slot)
         self._migration = None                      # in-flight MigrationPlan
+        # Streaming ingest (see repro.engine.ingest): pending delta
+        # batches over the growing table + the delta-free base zone maps
+        # the composed serving state is built from.  None until
+        # enable_ingest() — every path below is untouched without it.
+        self._delta = None
+        self._ingest_base: Optional[L.PartitionMetadata] = None
 
     def prepare(self, state_id: int) -> None:
         # In-memory reorganization is instantaneous; nothing to overlap.
@@ -264,12 +272,102 @@ class InMemoryBackend(_RegistryMixin):
             # tenant's (possibly hybrid) serving state in the fused pass.
             self._matrix.register(self.SERVING_SHADOW, meta)
 
+    def _install_base_meta(self, meta: L.PartitionMetadata) -> None:
+        """Install a delta-free base state, composing pending deltas on top.
+
+        With ingest disabled (or zero pending batches) the composed state
+        *is* ``meta`` — the same object — so the serving plane, the shadow
+        registration and every downstream estimate are bit-identical to
+        the pre-ingest paths.
+        """
+        self._ingest_base = meta
+        d = self._delta
+        self._install_serving_meta(meta if d is None else d.compose(meta))
+
     def _activate_layout(self, layout: L.Layout) -> None:
         self._serving = layout
-        self._install_serving_meta(layout.materialize(self.data))
+        d = self._delta
+        if d is not None and d.pending:
+            # An atomic (re)materialization rewrites the *grown* table:
+            # every pending delta batch is routed in and absorbed.
+            layout.true_meta = None
+            meta = layout.materialize(self.data)
+            d.absorb_up_to(len(self.data))
+        else:
+            meta = layout.materialize(self.data)
+        self._install_base_meta(meta)
 
     def activate(self, state_id: int) -> None:
         self._activate_layout(self._layouts[state_id])
+
+    # -- streaming ingest (see repro.engine.ingest) ---------------------
+    def enable_ingest(self):
+        """Open the write path: appended rows land as delta partitions."""
+        if self._compute == "reference":
+            raise ValueError(
+                "ingest needs the packed metadata plane (compute="
+                "'reference' serves straight off the layout object and "
+                "cannot compose delta partitions)")
+        if self._delta is None:
+            from .ingest import DeltaLog
+            self._delta = DeltaLog(len(self.data))
+        return self._delta
+
+    @property
+    def delta_log(self):
+        """The pending-delta state (None until :meth:`enable_ingest`)."""
+        return self._delta
+
+    @property
+    def ingest_base_meta(self) -> Optional[L.PartitionMetadata]:
+        """Zone maps of the clustered base under the composed deltas."""
+        return self._ingest_base
+
+    def ingest_rows(self, rows: np.ndarray):
+        """Append one batch as an unclustered delta partition.
+
+        The batch is visible to scans immediately: its exact zone maps are
+        composed onto the serving state and re-registered through the
+        StateMatrix listener events, so an attached FleetMatrix keeps
+        scoring this (now delta-bearing) tenant in the fused pass.
+        """
+        d = self._delta
+        if d is None:
+            raise RuntimeError("enable_ingest() first")
+        start = len(self.data)
+        self.data = np.concatenate([self.data, rows])
+        batch = d.append(rows, start)
+        # Exact (materialized) zone maps are stale for the grown table;
+        # estimated candidate metadata is sample-based and untouched.
+        for lay in self._layouts.values():
+            lay.true_meta = None
+        if self._serving is not None:
+            self._serving.true_meta = None
+            self._install_serving_meta(d.compose(self._ingest_base))
+        return batch
+
+    def delta_source(self):
+        """(assignment, meta) of the hybrid delta-bearing source state.
+
+        What the migration planner diffs a compaction (or a drift reorg
+        with deltas pending) against: clustered base partitions plus one
+        pseudo-partition per delta batch.  None with no pending deltas —
+        the plain planning path stays bit-identical.
+        """
+        d = self._delta
+        if d is None or not d.pending:
+            return None
+        base_len = d.clustered_len
+        serving = self._serving
+        if serving is not None and serving.route is not None:
+            base_assign = np.asarray(serving.route(self.data[:base_len]),
+                                     dtype=np.int64)
+        else:
+            base_assign = np.zeros(base_len, dtype=np.int64)
+        base = self._ingest_base
+        assign = d.source_assignment(base_assign, base.num_partitions,
+                                     len(self.data))
+        return assign, d.compose(base)
 
     @property
     def serving_state(self) -> Optional[int]:
@@ -298,6 +396,13 @@ class InMemoryBackend(_RegistryMixin):
         if self._migration is not None:
             raise RuntimeError("a migration is already in flight")
         self._migration = plan
+        if self._delta is not None:
+            # The plan routed the table as of planning time: those rows
+            # (pending deltas included — they are source pseudo-partitions
+            # of the plan) now belong to the migration, and its hybrid
+            # zone maps track them partition by partition.  Batches
+            # appended mid-flight stack as fresh deltas on top.
+            self._delta.absorb_up_to(len(plan.target_assignment))
 
     def apply_migration(self, hybrid_meta: L.PartitionMetadata,
                         newly_done: Sequence[int]) -> None:
@@ -307,14 +412,22 @@ class InMemoryBackend(_RegistryMixin):
         SERVING_SHADOW plane entry), so estimates, serve fusion and block
         serving all score the mixed moved/unmoved partitioning exactly.
         """
-        self._install_serving_meta(hybrid_meta)
+        self._install_base_meta(hybrid_meta)
 
     def complete_migration(self, plan) -> None:
         """The last move landed: snap to the target layout through the
         same path :meth:`activate` takes (bitwise the atomic end state,
         even if the target state was evicted mid-flight)."""
         self._migration = None
-        self._activate_layout(plan.target)
+        d = self._delta
+        if d is not None:
+            # The completed target covers exactly the rows the plan
+            # routed; mid-flight batches stay pending delta partitions.
+            d.absorb_up_to(len(plan.target_assignment))
+            self._serving = plan.target
+            self._install_base_meta(plan.target_meta)
+        else:
+            self._activate_layout(plan.target)
 
     def estimate_costs(self, state_ids: Sequence[int],
                        query: wl.Query) -> Dict[int, float]:
@@ -420,7 +533,8 @@ class DiskBackend(_RegistryMixin):
     """
 
     def __init__(self, data: np.ndarray, root: str, compress: bool = True,
-                 background: bool = True, compute: str = "numpy"):
+                 background: bool = True, compute: str = "numpy",
+                 durable: bool = False, wal_snapshot_every: int = 64):
         self.data = data
         self.root = root
         self.compress = compress
@@ -438,6 +552,18 @@ class DiskBackend(_RegistryMixin):
         # In-flight incremental migration (see repro.engine.reorg):
         # (plan, partial target store, done mask, hybrid metadata).
         self._migration: Optional[tuple] = None
+        # Streaming ingest: pending delta batches (files under deltas/).
+        self._delta = None
+        self._delta_dir = os.path.join(root, "deltas")
+        #: Crash-safe manifest WAL (``durable=True``): every manifest
+        #: mutation — initial write, layout swap, delta append, migration
+        #: micro-batch — is logged *before* it takes effect, with periodic
+        #: snapshots, so recovery replays to a bitwise-identical manifest.
+        self.wal = None
+        if durable:
+            from repro.data.wal import ManifestWAL
+            self.wal = ManifestWAL(os.path.join(root, "wal"),
+                                   snapshot_every=wal_snapshot_every)
 
     # ------------------------------------------------------------------
     def _new_store(self) -> PartitionStore:
@@ -500,10 +626,36 @@ class DiskBackend(_RegistryMixin):
             thread, store, _ = pending
             if thread is not None:
                 thread.join()
+        self._log_swap(store)
         old = self._serving_store
         self._serving_store, self._serving_layout = store, layout
         if old is not None:
             shutil.rmtree(old.root, ignore_errors=True)
+        self._absorb_deltas()
+
+    def _log_swap(self, store: PartitionStore) -> None:
+        """WAL-commit a layout swap *before* the pointer flips: the record
+        carries the new store's exact manifest, so replay reconstructs it
+        bitwise even if the crash lands mid-flip."""
+        if self.wal is None:
+            return
+        with open(os.path.join(store.root, "manifest.json")) as f:
+            manifest = json.load(f)
+        op = "init" if self._serving_store is None else "swap"
+        self.wal.append({"op": op,
+                         "store": os.path.basename(store.root),
+                         "manifest": manifest})
+
+    def _absorb_deltas(self) -> None:
+        """A full (re)write just routed every pending delta row into the
+        new clustered store: retire the delta files."""
+        d = self._delta
+        if d is None or not d.pending:
+            return
+        for batch in d.batches:
+            os.remove(os.path.join(self._delta_dir,
+                                   f"delta_{batch.batch_id:05d}.npz"))
+        d.absorb_up_to(len(self.data))
 
     @property
     def serving_state(self) -> Optional[int]:
@@ -528,6 +680,78 @@ class DiskBackend(_RegistryMixin):
         with self._lock:
             return not entry["done"]
 
+    # -- streaming ingest (see repro.engine.ingest) ---------------------
+    def enable_ingest(self):
+        """Open the write path: appended rows land as on-disk delta files
+        (``deltas/delta_*.npz``) that scans read alongside the clustered
+        store until the next full (re)write absorbs them."""
+        if self._delta is None:
+            from .ingest import DeltaLog
+            self._delta = DeltaLog(len(self.data))
+            os.makedirs(self._delta_dir, exist_ok=True)
+        return self._delta
+
+    @property
+    def delta_log(self):
+        """The pending-delta state (None until :meth:`enable_ingest`)."""
+        return self._delta
+
+    @property
+    def ingest_base_meta(self) -> Optional[L.PartitionMetadata]:
+        """Zone maps of the clustered base store (manifest-derived)."""
+        if self._serving_store is None:
+            return None
+        return self._serving_store.metadata()
+
+    def ingest_rows(self, rows: np.ndarray):
+        """Append one batch as an unclustered on-disk delta partition.
+
+        Commit protocol (crash-safe under ``durable=True``): the delta
+        file is written first, then the WAL record — the record is the
+        commit point, so a crash between the two leaves an orphaned file
+        that replay simply never references.
+        """
+        d = self._delta
+        if d is None:
+            raise RuntimeError("enable_ingest() first")
+        start = len(self.data)
+        self.data = np.concatenate([self.data, rows])
+        batch = d.append(rows, start)
+        fname = f"delta_{batch.batch_id:05d}.npz"
+        save = np.savez_compressed if self.compress else np.savez
+        save(os.path.join(self._delta_dir, fname), rows=rows)
+        if self.wal is not None:
+            self.wal.append({"op": "append_delta",
+                             "batch_id": batch.batch_id,
+                             "file": fname,
+                             "mins": [float(x) for x in batch.mins],
+                             "maxs": [float(x) for x in batch.maxs],
+                             "rows": batch.rows})
+        # Prepared stores were written against the pre-append table: their
+        # output is stale.  Cancel them; activation rewrites from scratch.
+        for sid in list(self._pending):
+            thread, store, entry = self._pending.pop(sid)
+            with self._lock:
+                entry["cancelled"] = True
+                finished = entry["done"] or thread is None
+            if finished:
+                shutil.rmtree(store.root, ignore_errors=True)
+        for lay in self._layouts.values():
+            lay.true_meta = None
+        return batch
+
+    @staticmethod
+    def recover_state(root: str) -> dict:
+        """Replay the manifest WAL under ``root`` after a crash.
+
+        Returns the reduced manifest state (serving store + manifest,
+        pending delta batches, in-flight migration) — bitwise identical,
+        via :func:`repro.data.wal.canonical_manifest`, to the state an
+        uninterrupted run would have logged.
+        """
+        from repro.data.wal import ManifestWAL
+        return ManifestWAL(os.path.join(root, "wal")).replay()
+
     # -- incremental migration (see repro.engine.reorg) -----------------
     @property
     def serving_layout(self) -> Optional[L.Layout]:
@@ -549,6 +773,11 @@ class DiskBackend(_RegistryMixin):
         store = self._new_store()
         done = np.zeros(plan.num_target_partitions, dtype=bool)
         self._migration = (plan, store, done, None)
+        if self.wal is not None:
+            self.wal.append({"op": "migration_begin",
+                             "store": os.path.basename(store.root),
+                             "target_state": plan.target.layout_id,
+                             "num_targets": plan.num_target_partitions})
 
     def _write_target_partition(self, plan, store: PartitionStore,
                                 j: int) -> None:
@@ -570,6 +799,12 @@ class DiskBackend(_RegistryMixin):
         plan, store, done, _ = self._migration
         for j in newly_done:
             self._write_target_partition(plan, store, j)
+        if self.wal is not None:
+            # Logged after the files land: a crash before this record
+            # replays to the pre-batch done set, and the orphaned partition
+            # files are rewritten when the moves re-run.
+            self.wal.append({"op": "migration_apply",
+                             "done": [int(j) for j in newly_done]})
         done[list(newly_done)] = True
         self._migration = (plan, store, done, hybrid_meta)
 
@@ -601,6 +836,13 @@ class DiskBackend(_RegistryMixin):
         write_manifest(store.root, plan.num_target_partitions,
                        meta.mins.tolist(), meta.maxs.tolist(), meta.rows,
                        plan.target.name)
+        if self.wal is not None:
+            self.wal.append({"op": "swap",
+                             "store": os.path.basename(store.root),
+                             "manifest": manifest_dict(
+                                 plan.num_target_partitions,
+                                 meta.mins.tolist(), meta.maxs.tolist(),
+                                 meta.rows, plan.target.name)})
         old = self._serving_store
         self._serving_store, self._serving_layout = store, plan.target
         if old is not None:
@@ -633,11 +875,26 @@ class DiskBackend(_RegistryMixin):
                     rows_read += len(z["rows"])
         return rows_read / max(len(self.data), 1)
 
+    def _serve_deltas(self, query: wl.Query) -> int:
+        """Rows read from pending delta files the query cannot skip."""
+        d = self._delta
+        if d is None or not d.pending:
+            return 0
+        rows_read = 0
+        for batch in d.batches:
+            if ((batch.mins <= query.hi) & (batch.maxs >= query.lo)).all():
+                path = os.path.join(self._delta_dir,
+                                    f"delta_{batch.batch_id:05d}.npz")
+                with np.load(path) as z:
+                    rows_read += len(z["rows"])
+        return rows_read
+
     def serve(self, query: wl.Query) -> float:
         if self._migration is not None and self._migration[3] is not None:
             return self._serve_hybrid(query)
         _, stats = self._serving_store.scan(query)
-        return stats.rows_read / max(len(self.data), 1)
+        return ((stats.rows_read + self._serve_deltas(query))
+                / max(len(self.data), 1))
 
     def close(self) -> None:
         """Join background writers and remove all materialized directories."""
@@ -655,3 +912,4 @@ class DiskBackend(_RegistryMixin):
         if self._serving_store is not None:
             shutil.rmtree(self._serving_store.root, ignore_errors=True)
             self._serving_store = self._serving_layout = None
+        shutil.rmtree(self._delta_dir, ignore_errors=True)

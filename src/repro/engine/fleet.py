@@ -39,11 +39,15 @@ from .scheduler import ReorgScheduler, UnlimitedScheduler
 
 @dataclasses.dataclass
 class FleetStepResult:
-    """One interleaved event's pass through the fleet."""
+    """One interleaved event's pass through the fleet.
+
+    ``step`` is None for ingest events — they append rows without
+    advancing the tenant's query index, so there is no step observation.
+    """
 
     tick: int                   # fleet clock (1-based event counter)
     tenant_id: str
-    step: StepResult            # the tenant-local step observation
+    step: Optional[StepResult]  # the tenant-local step observation
     swap_deferred: bool         # a due swap was kept waiting at this step
 
 
@@ -363,27 +367,38 @@ class FleetEngine:
     # ------------------------------------------------------------------
     # Driving the fleet
     # ------------------------------------------------------------------
-    def step(self, tenant_id: str, query: wl.Query) -> FleetStepResult:
-        """Advance the fleet by one interleaved event."""
+    def step(self, tenant_id: str, event) -> FleetStepResult:
+        """Advance the fleet by one interleaved event.
+
+        ``event`` is a :class:`repro.core.workload.Query` (one tenant
+        step) or a :class:`repro.core.workload.IngestBatch` (rows appended
+        to the tenant's table — visible to its very next query, ticking
+        the fleet clock and the scheduler but not the tenant's own index).
+        """
         engine = self._tenants[tenant_id]
         self._tick += 1
         self.scheduler.tick(self._tick)
         self._pump()
+        if isinstance(event, wl.IngestBatch):
+            engine.ingest(event.rows)
+            return FleetStepResult(tick=self._tick, tenant_id=tenant_id,
+                                   step=None, swap_deferred=False)
         before = self.deferred_ticks
-        step = engine.step(query)
+        step = engine.step(event)
         return FleetStepResult(tick=self._tick, tenant_id=tenant_id,
                                step=step,
                                swap_deferred=self.deferred_ticks > before)
 
     def run(self, events: Iterable[Tuple[str, wl.Query]],
             name: Optional[str] = None) -> FleetResult:
-        """Step every ``(tenant_id, query)`` event and return the trace.
+        """Step every ``(tenant_id, event)`` event and return the trace.
 
         Accepts any iterable of events, including a
-        :class:`repro.core.workload.FleetStream`.
+        :class:`repro.core.workload.FleetStream` or a mixed
+        query/ingest :class:`repro.core.workload.IngestStream`.
         """
-        for tenant_id, query in events:
-            self.step(tenant_id, query)
+        for tenant_id, event in events:
+            self.step(tenant_id, event)
         return self.result(name)
 
     # ------------------------------------------------------------------
@@ -459,15 +474,31 @@ class FleetEngine:
             engine.start()
         i, n = 0, len(events)
         while i < n:
+            if not isinstance(events[i][1], wl.Query):
+                # Ingest event: handled inline through the same per-event
+                # machinery as :meth:`step` (tick, scheduler, pump, append)
+                # — never scored by the fused pass, so a stream without
+                # ingest events takes exactly the pre-ingest path.
+                tid, event = events[i]
+                self._tick += 1
+                scheduler.tick(self._tick)
+                if self._waiting:
+                    self._pump()
+                prep[tid][0].ingest(event.rows)
+                i += 1
+                continue
             frames: List[List[Tuple[str, wl.Query]]] = []
             while len(frames) < frames_per_pass and i < n:
                 j = i
                 seen = set()
-                while j < n and events[j][0] not in seen:
+                while (j < n and isinstance(events[j][1], wl.Query)
+                       and events[j][0] not in seen):
                     seen.add(events[j][0])
                     j += 1
                 frames.append(events[i:j])
                 i = j
+                if j < n and not isinstance(events[j][1], wl.Query):
+                    break
             primed = fm.estimate_frames(frames)
             for frame, primes in zip(frames, primed):
                 for (tid, q), prime in zip(frame, primes):

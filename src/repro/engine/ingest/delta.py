@@ -1,0 +1,121 @@
+"""Delta partitions: unclustered append batches visible to scans at once.
+
+Streaming ingest lands rows *without* routing them through the serving
+layout: each :meth:`DeltaLog.append` becomes one **delta partition** with
+exact zone maps, stacked on top of the clustered base table's metadata by
+:meth:`DeltaLog.compose`.  Scans see appended rows immediately (the
+composed zone maps are installed as the backend's serving state, so the
+packed StateMatrix / FleetMatrix planes score delta-bearing tenants in the
+same fused pass), but skipping over deltas is poor by construction — a
+batch's bounds span whatever arrived — which is exactly the *clustering
+debt* the decision plane meters (:mod:`repro.engine.ingest.debt`).
+
+``clustered_len`` tracks the prefix of the backing table covered by the
+serving layout's clustering; everything beyond it lives in delta batches.
+A reorganization (atomic activate, or an incremental compaction planned
+over the deltas) *absorbs* batches: :meth:`absorb_up_to` drops every batch
+the rewrite covered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import layouts as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaBatch:
+    """One ingest batch: a [start, end) row range with exact zone maps."""
+
+    batch_id: int
+    start: int
+    end: int
+    mins: np.ndarray        # (C,)
+    maxs: np.ndarray        # (C,)
+
+    @property
+    def rows(self) -> int:
+        return self.end - self.start
+
+
+class DeltaLog:
+    """Pending delta batches over a growing table."""
+
+    def __init__(self, clustered_len: int):
+        self.clustered_len = int(clustered_len)
+        self.batches: List[DeltaBatch] = []
+        self._next_id = 0
+        #: Bumped whenever batches are absorbed (consumers reset caches).
+        self.generation = 0
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.batches)
+
+    @property
+    def num_batches(self) -> int:
+        return len(self.batches)
+
+    @property
+    def delta_rows(self) -> int:
+        return sum(b.rows for b in self.batches)
+
+    def append(self, rows: np.ndarray, start: int) -> DeltaBatch:
+        """Record one appended batch occupying ``[start, start+len)``."""
+        if rows.ndim != 2 or len(rows) == 0:
+            raise ValueError("an ingest batch must be a non-empty (N, C) "
+                             "array")
+        batch = DeltaBatch(batch_id=self._next_id, start=int(start),
+                           end=int(start) + len(rows),
+                           mins=rows.min(axis=0), maxs=rows.max(axis=0))
+        self._next_id += 1
+        self.batches.append(batch)
+        return batch
+
+    def compose(self, base: L.PartitionMetadata) -> L.PartitionMetadata:
+        """Base zone maps + one partition per pending delta batch.
+
+        With no pending batches this returns ``base`` itself (the same
+        object), so an ingest-enabled engine that never ingests serves
+        bit-identically to one without ingest.
+        """
+        if not self.batches:
+            return base
+        d_mins = np.stack([b.mins for b in self.batches])
+        d_maxs = np.stack([b.maxs for b in self.batches])
+        d_rows = np.array([float(b.rows) for b in self.batches])
+        return L.PartitionMetadata(
+            mins=np.concatenate([base.mins, d_mins]),
+            maxs=np.concatenate([base.maxs, d_maxs]),
+            rows=np.concatenate([base.rows, d_rows]))
+
+    def source_assignment(self, base_assignment: np.ndarray,
+                          num_base_partitions: int,
+                          total_len: int) -> Optional[np.ndarray]:
+        """Row -> partition assignment of the composed (hybrid) source.
+
+        Base rows keep their clustered assignment; batch ``k``'s rows map
+        to pseudo-partition ``num_base_partitions + k`` — the layout the
+        migration planner diffs a compaction (or a delta-bearing drift
+        reorg) against.  Rows beyond the last batch (none in practice:
+        every appended row is logged) are unreachable.
+        """
+        if not self.batches:
+            return None
+        out = np.empty(total_len, dtype=np.int64)
+        out[:self.clustered_len] = base_assignment
+        for k, b in enumerate(self.batches):
+            out[b.start:b.end] = num_base_partitions + k
+        return out
+
+    def absorb_up_to(self, length: int) -> None:
+        """A rewrite clustered rows [0, length): drop the covered batches."""
+        self.batches = [b for b in self.batches if b.start >= length]
+        self.clustered_len = max(self.clustered_len, int(length))
+        self.generation += 1
+
+
+__all__ = ["DeltaBatch", "DeltaLog"]

@@ -165,9 +165,23 @@ class ReorgExecutor:
             raise RuntimeError("a migration is already in flight")
         source = self.backend.serving_layout
         target = self.backend.get(state_id)
+        # Delta-bearing backends (streaming ingest) hand the planner the
+        # hybrid source — clustered base partitions plus one pseudo-
+        # partition per pending delta batch — so compactions (and drift
+        # reorgs with deltas in flight) diff against what is physically
+        # being served.  Returns None with no pending deltas, which keeps
+        # the plain path (and its traces) bit-identical.
+        src_assign = src_meta = None
+        delta_source = getattr(self.backend, "delta_source", None)
+        if delta_source is not None:
+            hybrid = delta_source()
+            if hybrid is not None:
+                src_assign, src_meta = hybrid
         plan = plan_migration(self.backend.data, source, target,
                               recent_queries=tuple(self._recent),
-                              compute=self.compute)
+                              compute=self.compute,
+                              source_assignment=src_assign,
+                              source_meta=src_meta)
         self._active = plan
         self._cursor = 0
         self._banked = 0.0

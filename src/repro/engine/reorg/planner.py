@@ -35,7 +35,7 @@ layouts' zone maps — exact numpy by default, or the
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -172,7 +172,10 @@ def scan_frequencies(metas: Sequence[L.PartitionMetadata],
 
 def plan_migration(data: np.ndarray, source: L.Layout, target: L.Layout,
                    recent_queries: Sequence[wl.Query] = (),
-                   compute: str = "numpy") -> MigrationPlan:
+                   compute: str = "numpy",
+                   source_assignment: Optional[np.ndarray] = None,
+                   source_meta: Optional[L.PartitionMetadata] = None,
+                   ) -> MigrationPlan:
     """Diff ``source`` -> ``target`` into greedily-ordered micro-moves.
 
     The move set is exactly the layout diff: one move per non-empty target
@@ -180,10 +183,25 @@ def plan_migration(data: np.ndarray, source: L.Layout, target: L.Layout,
     partition.  ``recent_queries`` drives the greedy
     benefit-per-row-moved ordering; with an empty sample the diff is
     ordered by target partition id (benefit 0).
+
+    ``source_assignment`` / ``source_meta`` (always passed together)
+    override the physical source partitioning — the hook the streaming
+    ingest plane uses to plan *compactions*: the source is then the
+    hybrid delta-bearing state (clustered base partitions plus one
+    pseudo-partition per delta batch), so a compaction's move set is
+    exactly the delta-touched target partitions and untouched clustered
+    partitions are skipped as identical.
     """
-    a_s = _assignment(source, data)
+    if (source_assignment is None) != (source_meta is None):
+        raise ValueError("source_assignment and source_meta go together")
+    if source_assignment is None:
+        a_s = _assignment(source, data)
+        src_meta = source.serving_meta()
+    else:
+        a_s = np.asarray(source_assignment, dtype=np.int64)
+        src_meta = source_meta
     a_t = _assignment(target, data)
-    p_s = source.serving_meta().num_partitions
+    p_s = src_meta.num_partitions
     p_t = target.num_partitions
     target_meta = target.materialize(data)
 
@@ -215,7 +233,7 @@ def plan_migration(data: np.ndarray, source: L.Layout, target: L.Layout,
     if recent_queries and diff:
         q_lo, q_hi = wl.stack_queries(list(recent_queries))
         freq_src, freq_tgt = scan_frequencies(
-            [source.serving_meta(), target_meta], q_lo, q_hi,
+            [src_meta, target_meta], q_lo, q_hi,
             compute=compute)
         # Completing move j relocates block (i, j) from a partition read
         # with frequency freq_src[i] to one read with freq_tgt[j].

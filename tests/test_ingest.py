@@ -1,0 +1,650 @@
+"""Tests for the streaming ingest plane (repro.engine.ingest).
+
+Covers delta partitions and their immediate scan visibility, the
+clustering-debt meter and debt-triggered compactions (atomic and
+incremental), the mixed read/write fleet paths (loop and batched,
+bit-identical), the zero-ingest golden identity (S3: ingest enabled but
+unused changes nothing, across every drift scenario x scheduler), the
+durable DiskBackend WAL recovery, and the PartitionStore orphan-tmp
+reclamation (S1).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (OreoConfig, build_default_layout, layouts,
+                        make_generator, make_templates, workload as wl)
+from repro.core import layout_manager as lm
+from repro.core.workload import (INGEST_SCENARIOS, IngestBatch,
+                                 make_drift_scenario, make_ingest_scenario)
+from repro.data.partition_store import PartitionStore
+from repro.data.wal import canonical_manifest
+from repro.engine import (DebtMeter, DiskBackend, FleetEngine,
+                          InMemoryBackend, IngestConfig, KConcurrentScheduler,
+                          LayoutEngine, OreoPolicy, TokenBucketScheduler,
+                          UnlimitedScheduler)
+from repro.engine.ingest import DeltaLog
+
+
+# ---------------------------------------------------------------------------
+# Helpers / fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tenant_data():
+    return {f"t{t}": np.random.default_rng(300 + t).uniform(
+        0, 100, size=(2_000, 5)) for t in range(2)}
+
+
+@pytest.fixture(scope="module")
+def bounds(tenant_data):
+    lo = np.min([d.min(0) for d in tenant_data.values()], axis=0)
+    hi = np.max([d.max(0) for d in tenant_data.values()], axis=0)
+    return lo, hi
+
+
+def oreo_engine(data, incremental=False, ingest=None, alpha=10.0, delta=5,
+                seed=2, backend=None, sort_col=None):
+    cfg = OreoConfig(alpha=alpha, seed=seed, delta=delta,
+                     manager=lm.LayoutManagerConfig(target_partitions=8,
+                                                    window_size=60,
+                                                    gen_every=30))
+    policy = OreoPolicy(data,
+                        build_default_layout(0, data, 8, sort_col=sort_col),
+                        make_generator("qdtree"), cfg)
+    return LayoutEngine(policy, backend or InMemoryBackend(data),
+                        delta=cfg.delta, incremental=incremental,
+                        ingest=ingest)
+
+
+def simple_engine(data, ingest=None, incremental=False, alpha=2.0, delta=1,
+                  backend=None, **kw):
+    return oreo_engine(data, incremental=incremental, ingest=ingest,
+                       alpha=alpha, delta=delta, backend=backend, **kw)
+
+
+def queries_for(rng, data, n, bounded=2):
+    tmpl = make_templates(1, data.shape[1], rng,
+                          cols_per_template=(bounded, bounded))[0]
+    return [tmpl.sample(rng, data.min(0), data.max(0)) for _ in range(n)]
+
+
+SCHEDULERS = [
+    ("unlimited", UnlimitedScheduler),
+    ("k1", lambda: KConcurrentScheduler(1)),
+    ("bucket", lambda: TokenBucketScheduler(rate=0.01, capacity=1.0,
+                                            initial=0.0)),
+]
+
+ALL_SCENARIOS = ["sudden_shift", "gradual_drift", "cyclic_diurnal",
+                 "flash_crowd", "template_churn"]
+
+
+def assert_same_trace(a, b):
+    assert np.array_equal(a.query_costs, b.query_costs)
+    assert a.reorg_indices == b.reorg_indices
+    assert np.array_equal(a.state_seq, b.state_seq)
+
+
+# ---------------------------------------------------------------------------
+# S1: PartitionStore reclaims orphaned tmp dirs
+# ---------------------------------------------------------------------------
+
+def test_partition_store_reclaims_orphan_tmp(tmp_path):
+    """A crash mid-write/mid-reorganize leaves "<root>.tmp" behind; open
+    must reclaim it (the live directory was never touched)."""
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0, 10, size=(200, 2))
+    root = str(tmp_path / "store")
+    layout = build_default_layout(0, data, 4)
+    PartitionStore(root).write(data, layout)
+
+    orphan = tmp_path / "store.tmp"
+    orphan.mkdir()
+    (orphan / "part_00000.npz").write_bytes(b"partial garbage from a crash")
+    (orphan / "manifest.json").write_text('{"torn')
+
+    store = PartitionStore(root)                    # reopen: reclaims
+    assert not orphan.exists()
+    # the live store is intact and fully usable
+    meta = store.metadata()
+    assert meta.num_partitions == 4
+    out, stats = store.scan(queries_for(rng, data, 1, bounded=1)[0])
+    assert stats.partitions_total == 4
+    # and a subsequent reorganize stages through a fresh tmp unharmed
+    store.reorganize(build_default_layout(1, data, 4, sort_col=1))
+    assert store.metadata().num_partitions == 4
+
+
+# ---------------------------------------------------------------------------
+# DeltaLog / DebtMeter units
+# ---------------------------------------------------------------------------
+
+def test_delta_log_compose_identity_without_batches():
+    rng = np.random.default_rng(1)
+    data = rng.uniform(0, 100, size=(500, 3))
+    meta = build_default_layout(0, data, 4).materialize(data)
+    d = DeltaLog(len(data))
+    assert d.compose(meta) is meta          # the zero-ingest identity
+    assert d.source_assignment(np.zeros(500, np.int64), 4, 500) is None
+
+
+def test_delta_log_append_compose_absorb():
+    rng = np.random.default_rng(2)
+    data = rng.uniform(0, 100, size=(500, 3))
+    layout = build_default_layout(0, data, 4)
+    meta = layout.materialize(data)
+    d = DeltaLog(len(data))
+    rows1 = rng.uniform(0, 100, size=(40, 3))
+    rows2 = rng.uniform(0, 100, size=(60, 3))
+    b1 = d.append(rows1, 500)
+    b2 = d.append(rows2, 540)
+    assert (b1.batch_id, b2.batch_id) == (0, 1)
+    assert d.delta_rows == 100 and d.num_batches == 2
+    composed = d.compose(meta)
+    assert composed.num_partitions == 6
+    assert composed.total_rows == 600
+    np.testing.assert_array_equal(composed.mins[4], rows1.min(axis=0))
+    np.testing.assert_array_equal(composed.maxs[5], rows2.max(axis=0))
+    # source assignment: batch k -> pseudo-partition 4 + k
+    assign = d.source_assignment(layout.route(data), 4, 600)
+    assert assign.shape == (600,)
+    assert set(assign[500:540]) == {4} and set(assign[540:]) == {5}
+    # absorbing a prefix keeps later batches pending and bumps generation
+    gen = d.generation
+    d.absorb_up_to(540)
+    assert d.generation == gen + 1
+    assert [b.batch_id for b in d.batches] == [1]
+    assert d.clustered_len == 540
+    d.absorb_up_to(600)
+    assert not d.pending and d.compose(meta) is meta
+
+
+def test_delta_log_rejects_empty_batches():
+    d = DeltaLog(10)
+    with pytest.raises(ValueError):
+        d.append(np.zeros((0, 3)), 10)
+    with pytest.raises(ValueError):
+        d.append(np.zeros(5), 10)
+
+
+def test_debt_meter_accrues_only_positive_excess():
+    rng = np.random.default_rng(3)
+    data = rng.uniform(0, 100, size=(400, 2))
+    layout = build_default_layout(0, data, 4)
+    meta = layout.materialize(data)
+    meter = DebtMeter()
+    assert not meter.active
+    assert meter.observe(0.5, np.zeros(2), np.ones(2)) == 0.0   # inactive
+    rows = rng.uniform(0, 100, size=(50, 2))
+    meter.on_append(meta, rows, np.asarray(layout.route(rows), np.int64))
+    assert meter.active
+    # the compacted table has the same totals as base + batch
+    assert meter._compacted.total_rows == 450
+    q_lo, q_hi = np.full(2, -np.inf), np.full(2, np.inf)
+    ideal = float(layouts.eval_cost(meter._compacted, q_lo, q_hi))
+    inc = meter.observe(ideal + 0.25, q_lo, q_hi)
+    assert inc == pytest.approx(0.25)
+    assert meter.observe(ideal - 0.5, q_lo, q_hi) == 0.0    # clamped at 0
+    assert meter.debt == pytest.approx(0.25)
+    cfg = IngestConfig(debt_threshold=1.0)
+    assert not meter.triggered(alpha=10.0, config=cfg)
+    assert meter.triggered(alpha=0.2, config=cfg)
+    assert not meter.triggered(alpha=0.2,
+                               config=IngestConfig(auto_compact=False))
+    meter.reset()
+    assert meter.debt == 0.0 and not meter.active
+
+
+# ---------------------------------------------------------------------------
+# Engine-level ingest semantics
+# ---------------------------------------------------------------------------
+
+def test_engine_requires_ingest_capable_backend():
+    rng = np.random.default_rng(4)
+    data = rng.uniform(0, 100, size=(300, 3))
+    with pytest.raises(ValueError, match="reference"):
+        simple_engine(data, ingest=IngestConfig(),
+                      backend=InMemoryBackend(data, compute="reference"))
+    eng = simple_engine(data)
+    with pytest.raises(RuntimeError, match="without ingest"):
+        eng.ingest(np.zeros((2, 3)))
+
+
+def test_engine_rejects_incremental_ingest_on_disk_backend(tmp_path):
+    rng = np.random.default_rng(5)
+    data = rng.uniform(0, 100, size=(300, 3))
+    backend = DiskBackend(data, str(tmp_path / "d"), background=False)
+    with pytest.raises(ValueError, match="delta_source"):
+        simple_engine(data, ingest=IngestConfig(), incremental=True,
+                      backend=backend)
+    backend.close()
+
+
+def test_ingested_rows_visible_to_next_query():
+    """Appended rows raise the very next serve cost by exactly the delta
+    partition's contribution (wide bounds -> always scanned)."""
+    rng = np.random.default_rng(6)
+    data = rng.uniform(0, 100, size=(1000, 3))
+    eng = simple_engine(data, ingest=IngestConfig(auto_compact=False))
+    queries = queries_for(rng, data, 8)
+    for q in queries[:4]:
+        eng.step(q)
+    before = eng.backend.serve(queries[4])
+    eng.ingest(rng.uniform(0, 100, size=(250, 3)))
+    after = eng.backend.serve(queries[4])
+    # the composed state now carries 1250 rows; the delta batch spans the
+    # whole domain so the query cannot skip it
+    composed = eng.backend._serving_cache
+    assert composed[3] == 1250                      # total rows
+    assert after == pytest.approx((before * 1000 + 250) / 1250)
+    assert eng.backend.delta_log.pending
+    assert eng.ingest_stats()["pending_rows"] == 250
+
+
+def test_ingest_does_not_advance_query_index():
+    rng = np.random.default_rng(7)
+    data = rng.uniform(0, 100, size=(500, 3))
+    eng = simple_engine(data, ingest=IngestConfig(auto_compact=False))
+    for q in queries_for(rng, data, 5):
+        eng.step(q)
+    eng.ingest(rng.uniform(0, 100, size=(20, 3)))
+    res = eng.result()
+    assert len(res.query_costs) == 5
+    assert eng.ingest_stats()["ingested_rows"] == 20
+
+
+def test_always_compact_triggers_at_first_delta_query():
+    rng = np.random.default_rng(8)
+    data = rng.uniform(0, 100, size=(1000, 3))
+    eng = simple_engine(data, ingest=IngestConfig(debt_threshold=0.0))
+    queries = queries_for(rng, data, 6)
+    for q in queries[:3]:
+        eng.step(q)
+    eng.ingest(rng.uniform(0, 100, size=(100, 3)))
+    eng.step(queries[3])        # debt meter active -> trigger (threshold 0)
+    stats = eng.ingest_stats()
+    assert stats["compactions"] == [3]
+    eng.step(queries[4])        # delta=1: the compaction swap lands here
+    assert not eng.backend.delta_log.pending        # absorbed
+    assert eng.backend._serving_cache[3] == 1100
+    # compactions are real reorg charges in the trace
+    assert 3 in eng.result().reorg_indices
+
+
+def test_never_compact_accrues_debt_without_reorgs():
+    rng = np.random.default_rng(9)
+    # column-sorted data: narrow zone maps, so unclustered deltas hurt
+    data = np.sort(rng.uniform(0, 100, size=(1000, 3)), axis=0)
+    eng = simple_engine(data, ingest=IngestConfig(auto_compact=False),
+                        alpha=1.5, sort_col=0)
+    queries = queries_for(rng, data, 30)
+    for k, q in enumerate(queries):
+        if k == 5:
+            eng.ingest(rng.uniform(0, 100, size=(200, 3)))
+        eng.step(q)
+    stats = eng.ingest_stats()
+    assert stats["compactions"] == []
+    assert stats["clustering_debt"] > 1.5           # way past alpha
+    assert eng.backend.delta_log.pending            # never absorbed
+    assert eng.result().reorg_indices == []
+
+
+def test_debt_aware_compacts_once_debt_crosses_alpha():
+    rng = np.random.default_rng(10)
+    data = np.sort(rng.uniform(0, 100, size=(1000, 3)), axis=0)
+    eng = simple_engine(data, ingest=IngestConfig(debt_threshold=1.0),
+                        alpha=1.5, sort_col=0)
+    queries = queries_for(rng, data, 80)
+    compacted_at = None
+    for k, q in enumerate(queries):
+        if k == 5:
+            eng.ingest(rng.uniform(0, 100, size=(400, 3)))
+        eng.step(q)
+        if eng.compaction_indices and compacted_at is None:
+            compacted_at = k
+            assert eng.ingest_stats()["total_excess"] >= 1.5
+        if compacted_at is not None and k >= compacted_at + 2:
+            break                       # delta=1: the swap has landed
+    assert compacted_at is not None and compacted_at > 5
+    assert not eng.backend.delta_log.pending    # absorbed by the rewrite
+    # debt was reset by the absorb
+    assert eng.ingest_stats()["clustering_debt"] == 0.0
+
+
+def test_drift_reorg_absorbs_deltas_and_resets_debt():
+    """A policy-driven (drift) reorganization also rewrites the grown
+    table: deltas absorb through the same activation path."""
+    rng = np.random.default_rng(11)
+    data = rng.uniform(0, 100, size=(1000, 3))
+    eng = simple_engine(data, ingest=IngestConfig(auto_compact=False))
+    queries = queries_for(rng, data, 4)
+    for q in queries[:2]:
+        eng.step(q)
+    eng.ingest(rng.uniform(0, 100, size=(50, 3)))
+    assert eng.backend.delta_log.pending
+    sid = eng.backend.serving_state
+    eng.backend.activate(sid)                   # what a drift swap does
+    assert not eng.backend.delta_log.pending
+    assert eng.backend._serving_cache[3] == 1050
+    eng.step(queries[2])
+    assert eng.ingest_stats()["clustering_debt"] == 0.0
+
+
+def test_incremental_compaction_moves_only_delta_touched_partitions():
+    """An incremental compaction diffs the hybrid delta-bearing source
+    against the re-materialized target: clustered partitions whose row
+    set is unchanged are skipped; the charge ledger still telescopes to
+    bitwise alpha."""
+    rng = np.random.default_rng(12)
+    n = 2000
+    # sorted data + a clustered layout: routing appends touches only the
+    # partitions whose value range the delta rows fall into
+    data = np.sort(rng.uniform(0, 100, size=(n, 1)), axis=0)
+    eng = simple_engine(data, ingest=IngestConfig(debt_threshold=0.0),
+                        incremental=True, alpha=1.5, sort_col=0)
+    queries = queries_for(rng, data, 10, bounded=1)
+    for q in queries[:3]:
+        eng.step(q)
+    # deltas confined to a narrow value band -> few target partitions
+    eng.ingest(rng.uniform(10.0, 12.0, size=(120, 1)))
+    eng.step(queries[3])                        # trigger
+    eng.step(queries[4])                        # delta=1: begin + complete
+    ex = eng.reorg_executor
+    assert len(ex.migrations) == 1
+    mig = ex.migrations[0]
+    assert mig.completed_at >= 0
+    assert mig.charged == mig.alpha             # bitwise ledger close
+    k = eng.backend.ingest_base_meta.num_partitions
+    assert 0 < mig.moves_total < k              # untouched partitions skipped
+    assert not eng.backend.delta_log.pending
+
+
+def test_mid_flight_appends_stack_as_fresh_deltas():
+    """Rows appended while a migration is in flight stay pending delta
+    partitions (served immediately) and survive the completion absorb."""
+    rng = np.random.default_rng(13)
+    data = np.sort(rng.uniform(0, 100, size=(3000, 1)), axis=0)
+    eng = simple_engine(data, ingest=IngestConfig(debt_threshold=0.0),
+                        incremental=True, alpha=1.5, sort_col=0)
+    # tiny row budget so the compaction stays in flight across steps
+    eng.reorg_executor.rows_per_tick = 40
+    queries = queries_for(rng, data, 30, bounded=1)
+    for q in queries[:3]:
+        eng.step(q)
+    eng.ingest(rng.uniform(20.0, 30.0, size=(300, 1)))
+    eng.step(queries[3])                        # trigger
+    eng.step(queries[4])                        # begin (40 rows/tick)
+    assert eng.backend.migrating
+    mid = eng.ingest(rng.uniform(50.0, 60.0, size=(80, 1)))
+    assert eng.backend.delta_log.pending        # the mid-flight batch
+    eng.reorg_executor.rows_per_tick = None     # let it drain
+    k = 5
+    while eng.backend.migrating and k < 30:
+        eng.step(queries[k])
+        k += 1
+    assert not eng.backend.migrating
+    assert [b.batch_id for b in eng.backend.delta_log.batches] \
+        == [mid.batch_id]
+    assert eng.backend._serving_cache[3] == 3380
+    ex = eng.reorg_executor
+    assert ex.migrations[0].charged == ex.migrations[0].alpha
+
+
+def test_run_forces_stepwise_serving_under_ingest():
+    rng = np.random.default_rng(14)
+    data = rng.uniform(0, 100, size=(500, 3))
+    eng = simple_engine(data, ingest=IngestConfig())
+    with pytest.raises(ValueError, match="batch_serve"):
+        eng.run(wl.WorkloadStream(queries=queries_for(rng, data, 3),
+                                  segments=[], templates=[]),
+                batch_serve=True)
+
+
+# ---------------------------------------------------------------------------
+# S3: zero-ingest golden identity, every scenario x scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ALL_SCENARIOS)
+def test_zero_ingest_traces_bit_identical(scenario, tenant_data, bounds):
+    """Ingest enabled but never used: atomic and incremental fleet
+    traces — loop AND batched — are bit-identical to the pre-ingest
+    goldens under every scheduler."""
+    lo, hi = bounds
+    for _, factory in SCHEDULERS:
+        fs = make_drift_scenario(scenario, lo, hi, num_tenants=2,
+                                 queries_per_tenant=80, seed=7)
+        golden = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                              for tid in fs.tenant_ids}, factory()).run(fs)
+        golden_inc = FleetEngine({tid: oreo_engine(tenant_data[tid],
+                                                   incremental=True)
+                                  for tid in fs.tenant_ids},
+                                 factory()).run(fs)
+        for tid in fs.tenant_ids:
+            assert_same_trace(golden.per_tenant[tid],
+                              golden_inc.per_tenant[tid])
+        arms = {
+            "atomic-loop": lambda f: FleetEngine(
+                {tid: oreo_engine(tenant_data[tid], ingest=IngestConfig())
+                 for tid in fs.tenant_ids}, f()).run(fs),
+            "atomic-batched": lambda f: FleetEngine(
+                {tid: oreo_engine(tenant_data[tid], ingest=IngestConfig())
+                 for tid in fs.tenant_ids}, f()).run_batched(fs),
+            "incremental-loop": lambda f: FleetEngine(
+                {tid: oreo_engine(tenant_data[tid], incremental=True,
+                                  ingest=IngestConfig())
+                 for tid in fs.tenant_ids}, f()).run(fs),
+        }
+        for label, arm in arms.items():
+            res = arm(factory)
+            for tid in fs.tenant_ids:
+                assert_same_trace(golden.per_tenant[tid],
+                                  res.per_tenant[tid]), (label, tid)
+            assert res.swaps_deferred == golden.swaps_deferred, label
+            assert res.deferred_ticks == golden.deferred_ticks, label
+
+
+# ---------------------------------------------------------------------------
+# Mixed read/write fleet streams
+# ---------------------------------------------------------------------------
+
+def test_ingest_scenarios_materialize_and_preserve_order(bounds):
+    lo, hi = bounds
+    assert set(INGEST_SCENARIOS) == {"trickle", "append_heavy", "mixed_rw",
+                                     "ingest_burst", "bulk_load"}
+    for name in sorted(INGEST_SCENARIOS):
+        fs = make_ingest_scenario(name, lo, hi, num_tenants=2,
+                                  queries_per_tenant=60, seed=5)
+        assert fs.scenario == name
+        assert fs.total_appended_rows > 0
+        assert len(fs.events) == sum(len(v) for v in fs.per_tenant.values())
+        for tid in fs.tenant_ids:
+            assert len(fs.tenant_queries(tid)) == 60
+            # interleaving preserves per-tenant event order
+            replayed = [e for t, e in fs.events if t == tid]
+            assert all(x is y for x, y
+                       in zip(replayed, fs.per_tenant[tid]))
+        # determinism
+        again = make_ingest_scenario(name, lo, hi, num_tenants=2,
+                                     queries_per_tenant=60, seed=5)
+        for (t1, e1), (t2, e2) in zip(fs.events, again.events):
+            assert t1 == t2 and type(e1) is type(e2)
+            if isinstance(e1, IngestBatch):
+                np.testing.assert_array_equal(e1.rows, e2.rows)
+
+
+@pytest.mark.parametrize("scenario", ["trickle", "mixed_rw", "bulk_load"])
+def test_fleet_mixed_stream_loop_vs_batched_bit_identical(scenario,
+                                                          tenant_data,
+                                                          bounds):
+    lo, hi = bounds
+    fs = make_ingest_scenario(scenario, lo, hi, num_tenants=2,
+                              queries_per_tenant=120, seed=9)
+
+    def build():
+        return FleetEngine({tid: oreo_engine(tenant_data[tid], alpha=2.0,
+                                             ingest=IngestConfig())
+                            for tid in fs.tenant_ids}, UnlimitedScheduler())
+
+    loop, batched = build(), build()
+    rl, rb = loop.run(fs), batched.run_batched(fs)
+    for tid in fs.tenant_ids:
+        assert_same_trace(rl.per_tenant[tid], rb.per_tenant[tid])
+        assert (loop.tenant(tid).compaction_indices
+                == batched.tenant(tid).compaction_indices)
+        assert len(rl.per_tenant[tid].query_costs) == 120
+    assert rl.ticks == rb.ticks == len(fs)
+
+
+def test_fleet_incremental_mixed_stream_matches_atomic(tenant_data, bounds):
+    """Unbounded budget: the incremental fleet's mixed-stream trace is
+    bit-identical to the atomic fleet's (compactions included)."""
+    lo, hi = bounds
+    fs = make_ingest_scenario("trickle", lo, hi, num_tenants=2,
+                              queries_per_tenant=120, seed=11)
+
+    def build(mode):
+        return FleetEngine({tid: oreo_engine(tenant_data[tid], alpha=2.0,
+                                             incremental=mode,
+                                             ingest=IngestConfig())
+                            for tid in fs.tenant_ids}, UnlimitedScheduler())
+
+    atomic, incr = build(False), build(True)
+    ra, ri = atomic.run(fs), incr.run(fs)
+    for tid in fs.tenant_ids:
+        assert_same_trace(ra.per_tenant[tid], ri.per_tenant[tid])
+        assert (atomic.tenant(tid).compaction_indices
+                == incr.tenant(tid).compaction_indices)
+        for mig in incr.tenant(tid).reorg_executor.migrations:
+            assert mig.completed_at == mig.begun_at
+            assert mig.charged == mig.alpha
+    # compactions actually happened somewhere in the fleet
+    assert any(atomic.tenant(tid).compaction_indices
+               for tid in fs.tenant_ids)
+
+
+def test_fleet_step_returns_none_observation_for_ingest(tenant_data):
+    data = tenant_data["t0"]
+    fleet = FleetEngine({"t0": oreo_engine(data, ingest=IngestConfig())},
+                        UnlimitedScheduler())
+    rng = np.random.default_rng(15)
+    q = queries_for(rng, data, 1)[0]
+    assert fleet.step("t0", q).step is not None
+    out = fleet.step("t0", IngestBatch(rows=rng.uniform(
+        0, 100, size=(10, data.shape[1]))))
+    assert out.step is None and out.tick == 2
+
+
+# ---------------------------------------------------------------------------
+# Durable DiskBackend: WAL recovery
+# ---------------------------------------------------------------------------
+
+def disk_engine(data, root, ingest=None, alpha=2.0, durable=True,
+                snapshot_every=64):
+    backend = DiskBackend(data, root, background=False, durable=durable,
+                          wal_snapshot_every=snapshot_every)
+    return simple_engine(data, ingest=ingest, alpha=alpha,
+                         backend=backend), backend
+
+
+def test_disk_backend_serves_pending_deltas(tmp_path):
+    rng = np.random.default_rng(16)
+    data = rng.uniform(0, 100, size=(600, 3))
+    eng, backend = disk_engine(data, str(tmp_path / "d"), durable=False,
+                               ingest=IngestConfig(auto_compact=False))
+    queries = queries_for(rng, data, 4)
+    eng.step(queries[0])
+    eng.ingest(rng.uniform(0, 100, size=(150, 3)))
+    # physical serve fraction == metadata cost of the composed state
+    composed = backend.delta_log.compose(backend.ingest_base_meta)
+    for q in queries[1:]:
+        got = backend.serve(q)
+        want = float(layouts.eval_cost(composed, q.lo, q.hi))
+        assert got == pytest.approx(want)
+    backend.close()
+
+
+def test_disk_backend_wal_replays_to_live_manifest(tmp_path):
+    """The crash-injection gate: at every point of a mixed run, replaying
+    the WAL reconstructs the serving manifest bitwise and the exact set
+    of pending delta batches."""
+    rng = np.random.default_rng(17)
+    data = rng.uniform(0, 100, size=(600, 3))
+    root = str(tmp_path / "d")
+    eng, backend = disk_engine(data, root, snapshot_every=5,
+                               ingest=IngestConfig(debt_threshold=0.0))
+    queries = queries_for(rng, data, 30)
+    for k, q in enumerate(queries):
+        eng.step(q)
+        if k % 6 == 4:
+            eng.ingest(rng.uniform(0, 100, size=(40, 3)))
+        # "crash now": an independent replay of the WAL directory must
+        # reproduce the live on-disk manifest bitwise
+        state = DiskBackend.recover_state(root)
+        assert state["serving"] == os.path.basename(
+            backend._serving_store.root)
+        with open(os.path.join(backend._serving_store.root,
+                               "manifest.json")) as f:
+            assert state["manifest"] == json.load(f)
+        live_pending = [b.batch_id for b in backend.delta_log.batches]
+        assert [d["batch_id"] for d in state["deltas"]] == live_pending
+        for d in state["deltas"]:
+            assert os.path.exists(os.path.join(root, "deltas", d["file"]))
+    assert eng.compaction_indices            # the run really compacted
+    # a second replay is idempotent (bitwise)
+    assert (canonical_manifest(DiskBackend.recover_state(root))
+            == canonical_manifest(DiskBackend.recover_state(root)))
+    backend.close()
+
+
+def test_disk_backend_orphaned_delta_file_is_ignored(tmp_path):
+    """Crash between delta-file write and WAL commit: the orphaned file
+    is never referenced by replay (the record is the commit point)."""
+    rng = np.random.default_rng(18)
+    data = rng.uniform(0, 100, size=(400, 3))
+    root = str(tmp_path / "d")
+    eng, backend = disk_engine(data, root,
+                               ingest=IngestConfig(auto_compact=False))
+    eng.step(queries_for(rng, data, 1)[0])
+    eng.ingest(rng.uniform(0, 100, size=(30, 3)))
+    # fabricate the crash artifact: a delta file with no WAL record
+    np.savez(os.path.join(root, "deltas", "delta_99999.npz"),
+             rows=np.zeros((5, 3)))
+    state = DiskBackend.recover_state(root)
+    assert [d["batch_id"] for d in state["deltas"]] == [0]
+    assert all(d["file"] != "delta_99999.npz" for d in state["deltas"])
+    backend.close()
+
+
+def test_disk_backend_wal_records_incremental_migration(tmp_path):
+    """Drift migrations on a durable DiskBackend log begin/apply/swap;
+    mid-flight crash replay shows the in-flight migration, completion
+    replay shows the target manifest."""
+    rng = np.random.default_rng(19)
+    data = np.sort(rng.uniform(0, 100, size=(1500, 2)), axis=0)
+    root = str(tmp_path / "d")
+    backend = DiskBackend(data, root, background=False, durable=True)
+    eng = simple_engine(data, incremental=True, alpha=1.5, backend=backend)
+    eng.reorg_executor.rows_per_tick = 100
+    queries = queries_for(rng, data, 60, bounded=1)
+    saw_in_flight = False
+    for q in queries:
+        eng.step(q)
+        state = DiskBackend.recover_state(root)
+        if backend.migrating:
+            saw_in_flight = True
+            assert state["migration"] is not None
+            done = state["migration"]["done"]
+            assert done == sorted(set(done))
+        if eng.result().reorg_indices and not backend.migrating:
+            break
+    final = DiskBackend.recover_state(root)
+    if eng.result().reorg_indices:
+        assert saw_in_flight
+        assert final["migration"] is None
+        with open(os.path.join(backend._serving_store.root,
+                               "manifest.json")) as f:
+            assert final["manifest"] == json.load(f)
+    backend.close()
