@@ -8,7 +8,7 @@ BENCH_DIR ?= .bench
 .PHONY: test test-kernels lint bench bench-full bench-smoke bench-gate \
         bench-fleet-smoke bench-fleet-gate bench-reorg-smoke \
         bench-reorg-gate bench-ingest-smoke bench-ingest-gate \
-        quickstart install
+        bench-kernels-smoke bench-kernels-gate quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -37,6 +37,7 @@ bench-full:
 	$(PYTHON) benchmarks/bench_fleet.py --out $(BENCH_DIR)/BENCH_fleet.json
 	$(PYTHON) benchmarks/bench_reorg.py --out $(BENCH_DIR)/BENCH_reorg.json
 	$(PYTHON) benchmarks/bench_ingest.py --out $(BENCH_DIR)/BENCH_ingest.json
+	$(PYTHON) benchmarks/bench_kernels.py --out $(BENCH_DIR)/BENCH_kernels.json
 
 bench-smoke:
 	mkdir -p $(BENCH_DIR)
@@ -65,6 +66,13 @@ bench-ingest-smoke:
 
 bench-ingest-gate: bench-ingest-smoke
 	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_ingest_smoke.json --baseline BENCH_ingest.json
+
+bench-kernels-smoke:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_kernels.py --smoke --out $(BENCH_DIR)/bench_kernels_smoke.json
+
+bench-kernels-gate: bench-kernels-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_kernels_smoke.json --baseline BENCH_kernels.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

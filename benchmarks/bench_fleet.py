@@ -16,9 +16,14 @@ Two sections, both written to ``BENCH_fleet.json``:
   layouts and a stateless argmin policy over ``backend.estimate_vector``
   (isolating the decision plane, exactly like ``bench_decision_loop``'s
   ScoringPolicy isolates the single-table plane), selective range queries
-  on every column.  Loop and batched runs are interleaved rep by rep and
-  each side takes its best, so the reported ``speedup_batched_vs_loop``
-  ratio is machine-portable where raw events/sec are not.
+  on every column.  The batched side runs ``compute="pallas_fused"``
+  (f64 operands, so the float32 guard routes scoring through the exact
+  numpy fused pass) and, because the policy implements
+  ``decide_frames``, resolves whole no-reorg frame regions through the
+  bulk decide path instead of per-event Python.  Loop and batched runs
+  are interleaved rep by rep and each side takes its best, so the
+  reported ``speedup_batched_vs_loop`` ratio is machine-portable where
+  raw events/sec are not.
 
 ``--smoke`` is the CI configuration; the checked-in ``fleet_smoke``
 section of ``BENCH_fleet.json`` holds the baseline ratios the regression
@@ -100,6 +105,7 @@ class VectorScoringPolicy:
         self.state_space = state_space
         self.num = len(state_space)
         self.ids = [lay.layout_id for lay in state_space]
+        self._ids_arr = np.asarray(self.ids, dtype=np.int64)
         # The engine consumes a Decision synchronously within the same
         # step, so a never-reorganizing policy can reuse one object.
         self._decision = Decision(state=self.ids[0])
@@ -114,6 +120,11 @@ class VectorScoringPolicy:
         dec = self._decision
         dec.state = self.ids[int(costs[:self.num].argmin())]
         return dec
+
+    def decide_frames(self, costs: np.ndarray, backend):
+        """Bulk form of :meth:`decide` (the BatchablePolicy contract):
+        row-wise argmin over the candidate slots, never a reorg."""
+        return self._ids_arr[costs[:, :self.num].argmin(axis=1)], None
 
     def info(self) -> dict:
         return {}
@@ -168,7 +179,7 @@ def bench_sweep_cell(num_tenants: int, rows: int, cols: int, num_states: int,
             fleet = fresh_fleet()
             t0 = time.perf_counter()
             res = (fleet.run(events) if mode == "loop"
-                   else fleet.run_batched(events))
+                   else fleet.run_batched(events, compute="pallas_fused"))
             best[mode] = min(best[mode], time.perf_counter() - t0)
             check[mode] = res.total_cost
     assert check["loop"] == check["batched"], \

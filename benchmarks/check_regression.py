@@ -18,7 +18,12 @@ benchmark families:
   query+reorg cost of the never-recluster and always-recluster arms
   divided by the clustering-debt-aware arm over the ingest scenarios
   (section ``cost_ratio_vs_debt_aware``; ratio > 1 means the debt-aware
-  compaction policy is paying off).
+  compaction policy is paying off);
+* ``bench_kernels.py --smoke`` vs ``BENCH_kernels.json`` — the wall time
+  of the pre-megakernel separate passes (per-frame ``fleet_scan``
+  launches + reduction + per-tenant ``move_score``) divided by the fused
+  decision pass on identical operands (section ``fused_vs_separate``;
+  ratio > 1 means the fused dataflow is paying off).
 
 Raw queries/sec are not comparable across machines, so the gate checks
 **ratios**, both sides measured in the same process on the same runner:
@@ -52,11 +57,11 @@ import sys
 #: Sections holding {config_key: {mode: ratio}} grids, per family.
 SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop",
             "cost_ratio_atomic_over_incremental",
-            "cost_ratio_vs_debt_aware")
+            "cost_ratio_vs_debt_aware", "fused_vs_separate")
 #: Dedicated smoke-baseline sections a checked-in file may carry; their
 #: grids win over the top-level (full-sweep) numbers for shared keys.
 SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke", "reorg_smoke",
-                  "ingest_smoke")
+                  "ingest_smoke", "kernels_smoke")
 
 
 def load_speedups(payload: dict, prefer_smoke: bool) -> dict:

@@ -7,8 +7,13 @@ and Tables I/II at reduced (documented) scale plus kernel rooflines.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+# Invoked as ``python benchmarks/run.py``, sys.path[0] is benchmarks/
+# itself — put the repo root first so the ``benchmarks`` package resolves.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
@@ -18,10 +23,10 @@ def main() -> None:
                     help="comma-separated subset, e.g. fig3,table1")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (appendix_multicopy, fig3_end_to_end,
-                            fig4_gap_to_optimal, fig5_alpha_sweep,
-                            fig6_epsilon_sweep, kernel_perf, table1_alpha,
-                            table2_ablations)
+    from benchmarks import (appendix_multicopy, bench_kernels,
+                            fig3_end_to_end, fig4_gap_to_optimal,
+                            fig5_alpha_sweep, fig6_epsilon_sweep,
+                            table1_alpha, table2_ablations)
     suites = {
         "fig3": fig3_end_to_end.run,
         "fig4": fig4_gap_to_optimal.run,
@@ -30,7 +35,7 @@ def main() -> None:
         "table1": table1_alpha.run,
         "table2": table2_ablations.run,
         "appendixD": appendix_multicopy.run,
-        "kernels": kernel_perf.run,
+        "kernels": bench_kernels.run,
     }
     if args.only:
         keep = set(args.only.split(","))

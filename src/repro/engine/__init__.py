@@ -64,9 +64,10 @@ from repro.engine.core import LayoutEngine, StepResult
 from repro.engine.fleet import FleetEngine, FleetResult, FleetStepResult
 from repro.engine.fleet_matrix import FleetMatrix
 from repro.engine.ingest import DebtMeter, DeltaBatch, DeltaLog, IngestConfig
-from repro.engine.policies import (Decision, GreedyPolicy, MTSOptimalPolicy,
-                                   OfflineOptimalPolicy, OreoPolicy, Policy,
-                                   RegretPolicy, StaticPolicy)
+from repro.engine.policies import (BatchablePolicy, Decision, GreedyPolicy,
+                                   MTSOptimalPolicy, OfflineOptimalPolicy,
+                                   OreoPolicy, Policy, RegretPolicy,
+                                   StaticPolicy, ThresholdSwitchPolicy)
 from repro.engine.reorg import (MicroMove, MigrationPlan, MigrationRecord,
                                 ReorgExecutor, plan_migration)
 from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
@@ -74,6 +75,7 @@ from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
 from repro.engine.state_matrix import StateMatrix
 
 __all__ = [
+    "BatchablePolicy",
     "DebtMeter", "Decision", "DeltaBatch", "DeltaLog", "DiskBackend",
     "FleetEngine", "FleetMatrix", "FleetResult",
     "FleetStepResult", "GreedyPolicy", "InMemoryBackend", "IngestConfig",
@@ -81,6 +83,6 @@ __all__ = [
     "MigrationPlan", "MigrationRecord", "OfflineOptimalPolicy", "OreoPolicy",
     "Policy", "RegretPolicy", "ReorgExecutor", "ReorgScheduler",
     "StateMatrix", "StaticPolicy", "StepResult", "StorageBackend",
-    "TokenBucketScheduler", "UnlimitedScheduler", "fleet_scan_matrix",
-    "plan_migration", "scan_matrix",
+    "ThresholdSwitchPolicy", "TokenBucketScheduler", "UnlimitedScheduler",
+    "fleet_scan_matrix", "plan_migration", "scan_matrix",
 ]

@@ -90,15 +90,18 @@ class _RegistryMixin:
     persistent tensors instead of a per-query re-pad of all S states.
 
     ``compute`` selects the estimation path: ``"numpy"`` (default, exact),
-    ``"pallas"`` (kernel-backed, float32), or ``"reference"`` — the original
-    per-query :func:`repro.core.layouts.eval_cost_states` re-padding path,
-    kept as the golden reference and as the benchmark baseline.
+    ``"pallas"`` (kernel-backed, float32 with an exactness guard),
+    ``"pallas_fused"`` (the decision megakernel, same guard — estimates
+    stay bit-exact because non-float32-representable operands fall back to
+    the numpy path), or ``"reference"`` — the original per-query
+    :func:`repro.core.layouts.eval_cost_states` re-padding path, kept as
+    the golden reference and as the benchmark baseline.
     """
 
     _layouts: Dict[int, L.Layout]
 
     def _init_registry(self, compute: str = "numpy") -> None:
-        if compute not in ("numpy", "pallas", "reference"):
+        if compute not in ("numpy", "pallas", "pallas_fused", "reference"):
             raise ValueError(f"unknown compute mode: {compute!r}")
         self._compute = compute
         self._layouts = {}
@@ -440,11 +443,11 @@ class InMemoryBackend(_RegistryMixin):
             out = {s: float(costs[m.slot(s)]) for s in state_ids}
         else:
             out = self._primed_dict(costs, state_ids)
-        if self._compute == "numpy" and self.SERVING_SHADOW in m:
+        if self.serve_primable and self.SERVING_SHADOW in m:
             # The shadow serving state rode along in the same packed pass:
             # remember its score so serve() on this query is a lookup.
-            # (numpy only — the pallas plane estimates in float32, and serve
-            # must stay exact.)
+            # (exact-estimate computes only — the unguarded pallas plane
+            # estimates in float32, and serve must stay exact.)
             self._serve_memo = (query,
                                 float(costs[m.slot(self.SERVING_SHADOW)]))
         return out
@@ -463,7 +466,7 @@ class InMemoryBackend(_RegistryMixin):
                 and primed[1] == version):
             return primed[2]
         costs = m.estimate(query.lo, query.hi)
-        if self._compute == "numpy":
+        if self.serve_primable:
             shadow = self.shadow_slot(version)
             if shadow >= 0:
                 self._serve_memo = (query, float(costs[shadow]))
@@ -484,8 +487,11 @@ class InMemoryBackend(_RegistryMixin):
     @property
     def serve_primable(self) -> bool:
         """True when a primed shadow-slot score is a valid serve memo —
-        i.e. :meth:`serve` charges exact metadata scores (numpy compute)."""
-        return self._compute == "numpy"
+        i.e. estimation charges exact metadata scores.  ``numpy`` is exact
+        by construction; ``pallas_fused`` is exact because its float32
+        kernel only runs when the operands are float32-representable
+        (bit-identical comparisons) and falls back to numpy otherwise."""
+        return self._compute in ("numpy", "pallas_fused")
 
     def serve(self, query: wl.Query) -> float:
         if self._compute == "reference":

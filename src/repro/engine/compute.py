@@ -9,17 +9,53 @@ single entry point for computing it:
   :func:`repro.core.layouts.partitions_scanned`.
 * ``pallas``: the TPU kernel :func:`repro.kernels.pruning.scan_matrix_pallas`
   (compiled on TPU/GPU, interpreter on CPU — auto-selected).  Operands are
-  cast to float32 on the way in, so results are exact only for
-  float32-representable bounds; use it for throughput on accelerators, not
-  for the bit-identical decision paths.
+  cast to float32 on the way in; when any bound would not survive that
+  cast exactly the call warns and falls back to the exact numpy path
+  (:func:`float32_exact` is the check), so the kernel path never silently
+  changes results.
+* ``pallas_fused``: the decision megakernel
+  (:func:`repro.kernels.decision_fused.decision_fused.fused_decision_pallas`)
+  — the same overlap semantics, but one operand pass produces the scan
+  matrix for a whole block of query frames (plus cost and move-frequency
+  outputs for callers that want them).  Same float32 guard as ``pallas``.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import numpy as np
 
-BACKENDS = ("numpy", "pallas")
+BACKENDS = ("numpy", "pallas", "pallas_fused")
+
+
+def float32_exact(*arrays: np.ndarray) -> bool:
+    """True iff every value survives a float64 -> float32 round-trip.
+
+    ``±inf`` round-trips exactly; a finite bound like ``nextafter(1, 2)``
+    does not — the Pallas kernels cast operands to float32, so only
+    float32-exact inputs keep the kernel paths bit-identical to the
+    float64 numpy comparisons.
+    """
+    for a in arrays:
+        a = np.asarray(a)
+        if a.dtype == np.float32:
+            continue
+        if not np.array_equal(a, a.astype(np.float32).astype(a.dtype)):
+            return False
+    return True
+
+
+def _f32_guard(name: str, *arrays: np.ndarray) -> bool:
+    """Warn and return False when a kernel path must fall back to numpy."""
+    if float32_exact(*arrays):
+        return True
+    warnings.warn(
+        f"{name}: bounds are not exactly float32-representable; the pallas "
+        f"kernel's float32 cast would silently change the scan matrix — "
+        f"falling back to the exact numpy path",
+        RuntimeWarning, stacklevel=3)
+    return False
 
 
 def scan_matrix(q_lo: np.ndarray, q_hi: np.ndarray, mins: np.ndarray,
@@ -33,8 +69,12 @@ def scan_matrix(q_lo: np.ndarray, q_hi: np.ndarray, mins: np.ndarray,
         overlap = ((mins[None, :, :] <= q_hi[:, None, :])
                    & (maxs[None, :, :] >= q_lo[:, None, :]))
         return overlap.all(axis=-1)
-    if backend == "pallas":
-        return _scan_matrix_pallas(q_lo, q_hi, mins, maxs)
+    if backend in ("pallas", "pallas_fused"):
+        if not _f32_guard("scan_matrix", q_lo, q_hi, mins, maxs):
+            return scan_matrix(q_lo, q_hi, mins, maxs, backend="numpy")
+        if backend == "pallas":
+            return _scan_matrix_pallas(q_lo, q_hi, mins, maxs)
+        return _scan_matrix_fused(q_lo, q_hi, mins, maxs)
     raise ValueError(f"unknown compute backend: {backend!r} "
                      f"(expected one of {BACKENDS})")
 
@@ -110,8 +150,15 @@ def fleet_scan_matrix(q_lo: np.ndarray, q_hi: np.ndarray, mins: np.ndarray,
     if backend == "numpy":
         overlap = ((mins <= q_hi[:, None, :]) & (maxs >= q_lo[:, None, :]))
         return overlap.all(axis=-1)
-    if backend == "pallas":
-        return _fleet_scan_pallas(q_lo, q_hi, mins, maxs)
+    if backend in ("pallas", "pallas_fused"):
+        if not _f32_guard("fleet_scan_matrix", q_lo, q_hi, mins, maxs):
+            return fleet_scan_matrix(q_lo, q_hi, mins, maxs,
+                                     backend="numpy")
+        if backend == "pallas":
+            return _fleet_scan_pallas(q_lo, q_hi, mins, maxs)
+        return np.asarray(fused_frames_scan(
+            q_lo[None], q_hi[None], mins[:, None, :, :],
+            maxs[:, None, :, :]))[0, :, 0, :]
     raise ValueError(f"unknown compute backend: {backend!r} "
                      f"(expected one of {BACKENDS})")
 
@@ -136,3 +183,31 @@ def _scan_matrix_pallas(q_lo, q_hi, mins, maxs) -> np.ndarray:
         jnp.asarray(q_lo, jnp.float32), jnp.asarray(q_hi, jnp.float32),
         jnp.asarray(mins, jnp.float32), jnp.asarray(maxs, jnp.float32))
     return np.asarray(out) > 0.5
+
+
+def fused_frames_scan(q_lo: np.ndarray, q_hi: np.ndarray, p_min: np.ndarray,
+                      p_max: np.ndarray) -> np.ndarray:
+    """(B, T, C) frame bounds x (T, S, P, C) plane -> (B, T, S, P) bool.
+
+    One megakernel launch scores every frame of a batched pass for every
+    tenant — the ``pallas_fused`` replacement for B separate
+    :func:`fleet_scan_matrix` calls.  Operands are cast to float32;
+    callers owning the bit-identity contract must check
+    :func:`float32_exact` first (see ``FleetMatrix._scanned_all``).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.decision_fused import decision_fused
+
+    scan, _, _ = decision_fused.fused_decision_pallas(
+        jnp.asarray(q_lo, jnp.float32), jnp.asarray(q_hi, jnp.float32),
+        jnp.asarray(p_min, jnp.float32), jnp.asarray(p_max, jnp.float32))
+    return np.asarray(scan) > 0.5
+
+
+def _scan_matrix_fused(q_lo, q_hi, mins, maxs) -> np.ndarray:
+    # (Q, C) x (P, C) through the megakernel: Q query frames of a single
+    # tenant whose plane has one state of P partitions.
+    out = fused_frames_scan(q_lo[:, None, :], q_hi[:, None, :],
+                            mins[None, None, :, :], maxs[None, None, :, :])
+    return out[:, 0, 0, :]

@@ -29,6 +29,8 @@ import collections
 import dataclasses
 from typing import Deque, Dict, Iterable, List, Mapping, Optional, Tuple
 
+import numpy as np
+
 from repro.core import oreo as _oreo
 from repro.core import workload as wl
 
@@ -451,16 +453,35 @@ class FleetEngine:
         :func:`repro.kernels.fleet_scan.fleet_scan.scan_fleet_pallas`
         kernel (float32 — throughput on accelerators, not bit-identity).
 
+        ``compute="pallas_fused"`` scores each pass in **one** decision
+        megakernel launch over all of its frames
+        (:func:`repro.engine.compute.fused_frames_scan`) instead of one
+        kernel call per frame; the float32 guard keeps estimates exact
+        (non-representable operands fall back to the numpy pass), so the
+        bit-identity contract holds here too.
+
+        When every tenant's policy implements the
+        :class:`repro.engine.policies.BatchablePolicy` contract (and no
+        incremental executor or ingest debt is attached), passes in which
+        no event charges a reorganization and no swap is pending resolve
+        through a *bulk* path: the argmin/threshold decision rule runs
+        once per tenant over the stacked primed cost matrix and the
+        per-event bookkeeping (cost trace, state trace, index, fleet
+        clock) is committed wholesale — no per-event Python at all.  Any
+        pass containing a charge, a pending swap, or a stale prime is
+        replayed through the exact per-event machinery, so traces stay
+        bit-identical under every scheduler.
+
         ``frames_per_pass`` controls how many frames are scored per fused
         pass (primed results a tenant invalidates by churning state are
         simply recomputed exactly at consumption time); the default scales
-        with fleet size so one pass covers a few hundred events.
+        with fleet size so one pass covers a few hundred events — about a
+        thousand when the bulk path is available, since then per-pass
+        fixed cost is all that remains.
         """
         fm = self._ensure_fleet_matrix(compute)
         scheduler = self.scheduler
         events = list(events)
-        if frames_per_pass is None:
-            frames_per_pass = max(1, 256 // max(len(self._tenants), 1))
         # Per-tenant hot-loop facts hoisted out of the inner loop; the
         # serve memo is only primable where serve() charges exact metadata
         # scores (see StorageBackend.serve_primable).
@@ -472,6 +493,30 @@ class FleetEngine:
         # scores fully-populated planes instead of falling back.
         for engine, _, _ in prep.values():
             engine.start()
+        # Static bulk-path eligibility: every tenant must carry a pure
+        # batched decision rule and bookkeeping a no-swap frame can replay
+        # wholesale (no incremental executor ticking per step, no ingest
+        # debt observing per query, exact primable serve scores).
+        bulk_ok = all(
+            callable(getattr(engine.policy, "decide_frames", None))
+            and engine.reorg_executor is None and engine._debt is None
+            and primable
+            for engine, _, primable in prep.values())
+        n_tenants = len(prep)
+        if frames_per_pass is None:
+            # A few hundred events per pass amortizes the fixed Python
+            # cost of a fused pass; with the bulk decide path available
+            # the per-pass fixed cost is all that's left, so larger
+            # passes pay off (a refused pass replays more events, but a
+            # bulk-eligible fleet refuses only on actual reorg/swap
+            # activity).
+            per_pass = 1024 if bulk_ok else 256
+            frames_per_pass = max(1, per_pass // max(n_tenants, 1))
+        # Whether to skip prime-tuple materialization on the next pass:
+        # flips off after a refused bulk commit (the replay needs primes,
+        # and a switch-heavy stretch would otherwise score twice), back
+        # on after a successful one.
+        dense_hint = True
         i, n = 0, len(events)
         while i < n:
             if not isinstance(events[i][1], wl.Query):
@@ -499,7 +544,21 @@ class FleetEngine:
                 i = j
                 if j < n and not isinstance(events[j][1], wl.Query):
                     break
-            primed = fm.estimate_frames(frames)
+            # A regular pass headed for the bulk path never reads the
+            # per-event prime tuples — score dense-only and, in the rare
+            # case the bulk commit is refused (pending swap, stale plane,
+            # a charged reorg), rescore with primes: the plane is
+            # untouched in between, so the rescore is bit-identical.
+            dense_only = (bulk_ok and dense_hint
+                          and all(len(f) == n_tenants for f in frames))
+            primed = fm.estimate_frames(frames, want_primes=not dense_only)
+            if bulk_ok:
+                if self._bulk_pass(frames, primed, prep):
+                    dense_hint = True
+                    continue
+                dense_hint = False
+                if dense_only:
+                    primed = fm.estimate_frames(frames)
             for frame, primes in zip(frames, primed):
                 for (tid, q), prime in zip(frame, primes):
                     # Inlined per-event path: same tick/pump/step sequence
@@ -533,6 +592,87 @@ class FleetEngine:
                         self._pump()
                     engine.step_fast(q)
         return self.result(name)
+
+    def _bulk_pass(self, frames, primed, prep) -> bool:
+        """Commit one scored pass without per-event Python, if legal.
+
+        Returns True when the whole pass was resolved in bulk; False
+        commits nothing — the caller replays the identical pass through
+        the exact per-event machinery (decide/charge/swap/serve), which
+        performs any side effects the pure batched rule must not.
+
+        Legality is exactly "no event of the pass can touch swap or
+        scheduler state": no reorganization waiting for a grant, no
+        pending Δ-delayed swap, every prime current (plane untouched since
+        scoring) with a ready-made serve score, and no tenant's batched
+        rule charging a reorganization.  Under those conditions each event
+        reduces to appending its primed serve cost and decision state —
+        the bookkeeping of a no-swap ``_step_core`` — and the scheduler
+        clock may advance in one jump: ``tick`` is idempotent arithmetic
+        over elapsed ticks (token refill is clamped the same whether
+        applied per event or once), and with no acquires in the region no
+        grant decision can depend on the intermediate values.
+        """
+        if self._waiting:
+            return False
+        # Fast dense path: on a *regular* pass (every frame holds exactly
+        # one event per tenant — the round-robin common case) where every
+        # tenant's costs came out of the batched (B, T, S) reduction, each
+        # tenant's whole cost matrix is one slice ``batched[:, row, :n]``
+        # and its serve scores one column — no per-event Python at all.
+        fm = self._fleet_matrix
+        dense = fm.last_pass_dense if fm is not None else None
+        t = len(prep)
+        if dense is not None and all(len(frame) == t for frame in frames):
+            batched, dinfo = dense
+            b = len(frames)
+            decided = []
+            for tid, (engine, backend, _) in prep.items():
+                d = dinfo.get(tid)
+                if d is None:
+                    decided = None          # mixed plane: prime-tuple path
+                    break
+                row, n_states, version, shadow = d
+                if engine._pending_swaps or version != backend._matrix.version:
+                    return False
+                costs = batched[:, row, :n_states]
+                states, reorg = engine.policy.decide_frames(costs, backend)
+                if reorg is not None and np.any(reorg):
+                    return False
+                decided.append((engine, states, costs[:, shadow]))
+            if decided is not None:
+                for engine, states, serve in decided:
+                    engine._query_costs.extend(serve.tolist())
+                    engine._state_seq.extend(states.tolist())
+                    engine._index += b
+                self._tick += b * t
+                self.scheduler.tick(self._tick)
+                return True
+        per: Dict[str, List[tuple]] = {}
+        for frame, primes in zip(frames, primed):
+            for (tid, _), prime in zip(frame, primes):
+                if prime is None or prime[2] is None:
+                    return False
+                per.setdefault(tid, []).append(prime)
+        decided = []
+        for tid, plist in per.items():
+            engine, backend, _ = prep[tid]
+            if engine._pending_swaps or plist[0][0] != backend._matrix.version:
+                return False
+            costs = np.stack([p[1] for p in plist])
+            states, reorg = engine.policy.decide_frames(costs, backend)
+            if reorg is not None and np.any(reorg):
+                return False
+            decided.append((engine, states, plist))
+        total = 0
+        for engine, states, plist in decided:
+            engine._query_costs.extend(p[2] for p in plist)
+            engine._state_seq.extend(int(s) for s in states)
+            engine._index += len(plist)
+            total += len(plist)
+        self._tick += total
+        self.scheduler.tick(self._tick)
+        return True
 
     def result(self, name: Optional[str] = None) -> FleetResult:
         stats = (self.scheduler.stats()

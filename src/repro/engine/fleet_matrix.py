@@ -37,6 +37,7 @@ fleet trace exactly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -97,6 +98,18 @@ class FleetMatrix:
         #: Bumped on every plane mutation (any tenant's register/deregister,
         #: attach, detach); consumers may key caches on it.
         self.version = 0
+        # Cached float32-representability of the packed plane, keyed on
+        # version (pallas_fused bit-identity guard).
+        self._f32_version = -1
+        self._f32_exact = False
+        #: Dense view of the most recent :meth:`estimate_frames` pass —
+        #: ``(batched, {tid: (row, n_states, version, shadow_slot)})`` for
+        #: the tenants whose costs came out of the batched (B, T, S)
+        #: reduction with a mirrored serving shadow, or None.  Consumers
+        #: (the fleet's bulk decide path) read whole per-tenant cost
+        #: matrices as ``batched[:, row, :n]`` instead of re-stacking B
+        #: per-frame prime vectors; reset at the start of every pass.
+        self.last_pass_dense: Optional[tuple] = None
 
     def set_compute_backend(self, compute_backend: str) -> None:
         """Switch the fused-scan compute path (validated; tensors shared)."""
@@ -331,7 +344,22 @@ class FleetMatrix:
         """
         tcap = self._tcap
         b = q_lo.shape[0]
-        if self.compute_backend == "pallas":
+        if self.compute_backend == "pallas_fused":
+            # One megakernel launch scores all B frames; a per-frame loop
+            # of fleet_scan_matrix calls (the "pallas" path below) reads
+            # the packed bounds B times instead.  The kernel casts to
+            # float32, so the plane (checked once per version) and the
+            # frame queries must be float32-exact for the bit-identity
+            # contract — otherwise fall back to the exact numpy pass.
+            if (self._plane_float32_exact()
+                    and compute.float32_exact(q_lo, q_hi)):
+                return compute.fused_frames_scan(q_lo, q_hi,
+                                                 self._mins, self._maxs)
+            warnings.warn(
+                "FleetMatrix(pallas_fused): operands are not exactly "
+                "float32-representable; using the exact numpy fused pass",
+                RuntimeWarning, stacklevel=2)
+        elif self.compute_backend == "pallas":
             n = self._scap * self._pcap
             mins3 = self._mins.reshape(tcap, n, self._c)
             maxs3 = self._maxs.reshape(tcap, n, self._c)
@@ -344,7 +372,15 @@ class FleetMatrix:
         return compute.fleet_masked_overlap(self._minsT, self._maxsT,
                                             q_lo, q_hi)
 
+    def _plane_float32_exact(self) -> bool:
+        """Cached-per-version float32-representability of the packed plane."""
+        if self._f32_version != self.version:
+            self._f32_version = self.version
+            self._f32_exact = compute.float32_exact(self._mins, self._maxs)
+        return self._f32_exact
+
     def estimate_frames(self, frames: Sequence[Sequence[tuple]],
+                        want_primes: bool = True,
                         ) -> List[List[Optional[Tuple[int, np.ndarray,
                                                       Optional[float]]]]]:
         """Score a block of *frames* — each at most one pending query per
@@ -365,8 +401,15 @@ class FleetMatrix:
         is mirrored).  A tenant whose plane changes between scoring and
         consumption (mid-decision state churn) is expected to be caught by
         the consumer's version check.
+
+        ``want_primes=False`` skips materializing the per-event prime
+        tuples (the returned lists are all ``None``) and only publishes
+        :attr:`last_pass_dense` — for callers that will consume the pass
+        through the bulk decide path and rescore exactly (plane unchanged,
+        so bit-identically) in the rare case they cannot.
         """
         b = len(frames)
+        self.last_pass_dense = None
         empty: List[List[Optional[tuple]]] = [
             [None] * len(fr) for fr in frames]
         if self._t == 0 or self._mins is None or b == 0:
@@ -426,6 +469,17 @@ class FleetMatrix:
                                     q_hi.reshape(b, tcap, c))
         batched: Optional[np.ndarray] = None
         out = empty
+        if not want_primes:
+            # Dense-only pass: one batched reduction, no per-event tuples.
+            if any(entry[3] for _, _, entry in live):
+                batched = (np.einsum("btsp,tsp->bts", scanned,
+                                     self._rows) / self._totals[None])
+                self.last_pass_dense = (batched, {
+                    tid: (entry[0], entry[1], entry[2], entry[5])
+                    for tid, entry in info.items()
+                    if entry is not None and entry[3]
+                    and entry[5] is not None})
+            return out
         for k, j, (row, n, version, fused_ok, sm, shadow) in live:
             if fused_ok:
                 # Equal reduce width and contiguity on both paths: the
@@ -448,6 +502,12 @@ class FleetMatrix:
             # is the exact shadow estimate (InMemoryBackend, numpy).
             out[k][j] = (version, costs,
                          float(costs[shadow]) if shadow is not None else None)
+        if batched is not None:
+            dense_info = {
+                tid: (entry[0], entry[1], entry[2], entry[5])
+                for tid, entry in info.items()
+                if entry is not None and entry[3] and entry[5] is not None}
+            self.last_pass_dense = (batched, dense_info)
         return out
 
     def estimate_frame(self, items: Sequence[Tuple[str, np.ndarray,

@@ -144,14 +144,15 @@ def scan_frequencies(metas: Sequence[L.PartitionMetadata],
     sample: ``(Q, C)`` bounds x S layouts -> one ``(P_s,)`` float vector
     per layout.
 
-    ``compute="numpy"`` is the exact float64 path;  ``"pallas"`` stacks
+    ``compute="numpy"`` is the exact float64 path; ``"pallas"`` stacks
     the layouts into one padded ``(S, P_max, C)`` plane and scores all
     (state, partition) move candidates in a single
-    :func:`repro.kernels.move_score.ops.move_scan_frequencies` launch
-    (float32 — ordering heuristic only, never cost accounting).
+    :func:`repro.kernels.move_score.ops.move_scan_frequencies` launch;
+    ``"pallas_fused"`` routes the same plane through the decision
+    megakernel's ``freq`` output (both float32 — ordering heuristic only,
+    never cost accounting).
     """
-    if compute == "pallas":
-        from repro.kernels.move_score import ops as ms_ops
+    if compute in ("pallas", "pallas_fused"):
         counts = [m.num_partitions for m in metas]
         p_max = max(counts) if counts else 0
         s, c = len(metas), metas[0].num_columns
@@ -160,8 +161,24 @@ def scan_frequencies(metas: Sequence[L.PartitionMetadata],
         for k, m in enumerate(metas):
             mins[k, :counts[k]] = m.mins
             maxs[k, :counts[k]] = m.maxs
-        freq = np.asarray(ms_ops.move_scan_frequencies(
-            q_lo.astype(np.float32), q_hi.astype(np.float32), mins, maxs))
+        if compute == "pallas_fused":
+            # The megakernel's freq output over a single-tenant plane
+            # (T=1, S layouts, P_max partitions): the (Q, C) sample is the
+            # recent-query window, and the same launch could also carry
+            # the scoring outputs for the planning tenant.
+            from repro.kernels.decision_fused import decision_fused
+            dummy = np.zeros((1, 1, c), dtype=np.float32)
+            _, _, freq = decision_fused.fused_decision_pallas(
+                dummy + 1.0, dummy,          # empty frame query: unused
+                mins[None], maxs[None],
+                w_lo=q_lo.astype(np.float32), w_hi=q_hi.astype(np.float32),
+                emit_scan=False)
+            freq = np.asarray(freq)[0]                       # (S, P_max)
+        else:
+            from repro.kernels.move_score import ops as ms_ops
+            freq = np.asarray(ms_ops.move_scan_frequencies(
+                q_lo.astype(np.float32), q_hi.astype(np.float32), mins,
+                maxs))
         return [freq[k, :counts[k]].astype(np.float64) for k in range(s)]
     out = []
     for m in metas:

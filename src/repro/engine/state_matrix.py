@@ -218,11 +218,12 @@ class StateMatrix:
     def _scanned(self, q_lo: np.ndarray, q_hi: np.ndarray) -> np.ndarray:
         """(n, P_cap) bool scan matrix over all registered states."""
         n = self._n
-        if self.compute_backend == "pallas":
+        if self.compute_backend in ("pallas", "pallas_fused"):
             mins2d = self._mins[:n].reshape(n * self._pcap, self._c)
             maxs2d = self._maxs[:n].reshape(n * self._pcap, self._c)
             return compute.scan_matrix(q_lo[None], q_hi[None], mins2d,
-                                       maxs2d, backend="pallas",
+                                       maxs2d,
+                                       backend=self.compute_backend,
                                        )[0].reshape(n, self._pcap)
         return compute.masked_overlap(self._minsT[:, :n, :],
                                       self._maxsT[:, :n, :], q_lo, q_hi)

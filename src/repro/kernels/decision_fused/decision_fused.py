@@ -1,0 +1,220 @@
+"""Pallas TPU megakernel: the whole per-tick decision plane in one pass.
+
+Every tick the engine needs three products of the same packed fleet plane
+``(T, S, P, C)``: the candidate-state scan matrix for cost scoring, the
+serve-shadow score (the shadow state's lane of that same matrix), and —
+for migration-planning tenants — per-partition scan frequencies over the
+recent-query window.  Run as three separate kernels
+(:mod:`repro.kernels.pruning`, :mod:`repro.kernels.fleet_scan`,
+:mod:`repro.kernels.move_score`) the bounds tensors stream from HBM three
+times per tick; this kernel reads them once and emits all three outputs:
+
+  grid = (T/BT, P/BP), partition blocks innermost.  Each program holds the
+  (B, BT, C) frame queries, the (W, 1, C) recent-query window, and one
+  (BT, S, BP, C) bounds tile in VMEM (the pipeline double-buffers the
+  streamed operands automatically), accumulates overlap ANDs over column
+  chunks, and writes
+
+  * ``scan`` (B, BT, S, BP) — its 0/1 block of the frame scan matrix;
+  * ``cost`` (B, BT, S) — scanned-row fraction, accumulated across the
+    inner partition-block axis (``@pl.when(j == 0)`` zero-init, partial
+    ``sum_p scan * rows * inv_totals`` added per block — the output block
+    index ignores j so revisits are consecutive);
+  * ``freq`` (BT, S, BP) — mean window overlap, the move planner's
+    ordering signal.
+
+The candidate axis S rides whole inside each block (S_cap is small), as do
+the frame axis B and window axis W.  Like the three kernels it fuses, this
+is VPU-bound and memory-bound (~C flops/byte over metadata); the win is
+one HBM pass over ``(T, S, P, C)`` bounds per tick instead of three, and
+one launch for all B frames instead of B ``fleet_scan`` launches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._backend import resolve_interpret
+
+DEFAULT_BT = 4
+DEFAULT_BP = 128
+
+
+def _overlap(qlo, qhi, pmin, pmax, col_chunk):
+    """(K, KT, C) queries x (BT, S, BP, C) bounds -> (K, BT, S, BP) 0/1.
+
+    KT is either BT (per-tenant frame queries) or 1 (a shared window row
+    broadcast to every tenant in the block).
+    """
+    k, kt, c = qlo.shape
+    bt, s, bp, _ = pmin.shape
+    acc = jnp.ones((k, bt, s, bp), jnp.float32)
+    n_chunks = pl.cdiv(c, col_chunk)
+    for i in range(n_chunks):
+        lo = i * col_chunk
+        width = min(col_chunk, c - lo)
+        ql = jax.lax.dynamic_slice(qlo, (0, 0, lo), (k, kt, width))
+        qh = jax.lax.dynamic_slice(qhi, (0, 0, lo), (k, kt, width))
+        pn = jax.lax.dynamic_slice(pmin, (0, 0, 0, lo), (bt, s, bp, width))
+        px = jax.lax.dynamic_slice(pmax, (0, 0, 0, lo), (bt, s, bp, width))
+        ov = ((pn[None] <= qh[:, :, None, None, :])
+              & (px[None] >= ql[:, :, None, None, :]))
+        acc = acc * ov.all(axis=-1).astype(jnp.float32)
+    return acc
+
+
+def _make_kernel(*, col_chunk, emit_scan, emit_cost, emit_freq):
+    def kernel(*refs):
+        it = iter(refs)
+        qlo_ref, qhi_ref, pmin_ref, pmax_ref = (next(it) for _ in range(4))
+        rows_ref = inv_ref = wlo_ref = whi_ref = None
+        if emit_cost:
+            rows_ref, inv_ref = next(it), next(it)
+        if emit_freq:
+            wlo_ref, whi_ref = next(it), next(it)
+        outs = list(it)
+
+        pmin = pmin_ref[...]                  # (BT, S, BP, C)
+        pmax = pmax_ref[...]
+        if emit_scan or emit_cost:
+            scan = _overlap(qlo_ref[...], qhi_ref[...], pmin, pmax,
+                            col_chunk)        # (B, BT, S, BP)
+        if emit_scan:
+            outs.pop(0)[...] = scan
+        if emit_cost:
+            cost_ref = outs.pop(0)            # (B, BT, S), revisited over j
+            part = ((scan * rows_ref[...][None]).sum(axis=-1)
+                    * inv_ref[...][None])
+
+            @pl.when(pl.program_id(1) == 0)
+            def _init():
+                cost_ref[...] = jnp.zeros_like(cost_ref)
+
+            cost_ref[...] += part
+        if emit_freq:
+            wov = _overlap(wlo_ref[...], whi_ref[...], pmin, pmax,
+                           col_chunk)         # (W, BT, S, BP)
+            outs.pop(0)[...] = jnp.mean(wov, axis=0)
+    return kernel
+
+
+def fused_decision_pallas(q_lo: jax.Array, q_hi: jax.Array,
+                          p_min: jax.Array, p_max: jax.Array,
+                          rows: Optional[jax.Array] = None,
+                          inv_totals: Optional[jax.Array] = None,
+                          w_lo: Optional[jax.Array] = None,
+                          w_hi: Optional[jax.Array] = None,
+                          *, emit_scan: bool = True, bt: int = DEFAULT_BT,
+                          bp: int = DEFAULT_BP, col_chunk: int = 8,
+                          interpret: Optional[bool] = None,
+                          ) -> Tuple[Optional[jax.Array],
+                                     Optional[jax.Array],
+                                     Optional[jax.Array]]:
+    """(B, T, C) frame queries x (T, S, P, C) plane -> (scan, cost, freq).
+
+    Output semantics match :func:`repro.kernels.decision_fused.ref.
+    fused_decision`; each element of the returned triple is ``None`` when
+    its inputs were not supplied (``cost`` needs ``rows`` (T, S, P) and
+    ``inv_totals`` (T, S); ``freq`` needs the (W, C) window bounds) or,
+    for ``scan``, when ``emit_scan=False``.  ``interpret=None``
+    auto-selects via :func:`repro.kernels._backend.resolve_interpret`.
+    """
+    emit_cost = rows is not None
+    emit_freq = w_lo is not None
+    if not (emit_scan or emit_cost or emit_freq):
+        raise ValueError("fused_decision_pallas: nothing to emit")
+    return _fused_call(q_lo, q_hi, p_min, p_max, rows, inv_totals,
+                       w_lo, w_hi, emit_scan=emit_scan, emit_cost=emit_cost,
+                       emit_freq=emit_freq, bt=bt, bp=bp,
+                       col_chunk=col_chunk,
+                       interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("emit_scan", "emit_cost",
+                                             "emit_freq", "bt", "bp",
+                                             "col_chunk", "interpret"))
+def _fused_call(q_lo, q_hi, p_min, p_max, rows, inv_totals, w_lo, w_hi, *,
+                emit_scan, emit_cost, emit_freq, bt, bp, col_chunk,
+                interpret):
+    B, T, C = q_lo.shape
+    _, S, P, _ = p_min.shape
+    bt = min(bt, T)
+    bp = min(bp, P)
+    pad_t = (-T) % bt
+    pad_p = (-P) % bp
+    if pad_t:
+        # Padded tenants get empty queries ([1, 0] per column) and empty
+        # bounds, zero rows and zero inverse totals: all outputs 0, sliced
+        # away below.
+        q_lo = jnp.pad(q_lo, ((0, 0), (0, pad_t), (0, 0)),
+                       constant_values=1.0)
+        q_hi = jnp.pad(q_hi, ((0, 0), (0, pad_t), (0, 0)),
+                       constant_values=0.0)
+        p_min = jnp.pad(p_min, ((0, pad_t), (0, 0), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        p_max = jnp.pad(p_max, ((0, pad_t), (0, 0), (0, 0), (0, 0)),
+                        constant_values=0.0)
+        if emit_cost:
+            rows = jnp.pad(rows, ((0, pad_t), (0, 0), (0, 0)))
+            inv_totals = jnp.pad(inv_totals, ((0, pad_t), (0, 0)))
+    if pad_p:
+        # Padded partition slots get empty bounds: never scanned.
+        p_min = jnp.pad(p_min, ((0, 0), (0, 0), (0, pad_p), (0, 0)),
+                        constant_values=1.0)
+        p_max = jnp.pad(p_max, ((0, 0), (0, 0), (0, pad_p), (0, 0)),
+                        constant_values=0.0)
+        if emit_cost:
+            rows = jnp.pad(rows, ((0, 0), (0, 0), (0, pad_p)))
+    Tp, Pp = T + pad_t, P + pad_p
+    grid = (Tp // bt, Pp // bp)
+
+    arrays = [q_lo, q_hi, p_min, p_max]
+    in_specs = [
+        pl.BlockSpec((B, bt, C), lambda i, j: (0, i, 0)),
+        pl.BlockSpec((B, bt, C), lambda i, j: (0, i, 0)),
+        pl.BlockSpec((bt, S, bp, C), lambda i, j: (i, 0, j, 0)),
+        pl.BlockSpec((bt, S, bp, C), lambda i, j: (i, 0, j, 0)),
+    ]
+    if emit_cost:
+        arrays += [rows, inv_totals]
+        in_specs += [
+            pl.BlockSpec((bt, S, bp), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bt, S), lambda i, j: (i, 0)),
+        ]
+    if emit_freq:
+        W = w_lo.shape[0]
+        arrays += [w_lo[:, None, :], w_hi[:, None, :]]
+        in_specs += [
+            pl.BlockSpec((W, 1, C), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((W, 1, C), lambda i, j: (0, 0, 0)),
+        ]
+    out_specs, out_shapes = [], []
+    if emit_scan:
+        out_specs.append(pl.BlockSpec((B, bt, S, bp),
+                                      lambda i, j: (0, i, 0, j)))
+        out_shapes.append(jax.ShapeDtypeStruct((B, Tp, S, Pp), jnp.float32))
+    if emit_cost:
+        out_specs.append(pl.BlockSpec((B, bt, S), lambda i, j: (0, i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((B, Tp, S), jnp.float32))
+    if emit_freq:
+        out_specs.append(pl.BlockSpec((bt, S, bp), lambda i, j: (i, 0, j)))
+        out_shapes.append(jax.ShapeDtypeStruct((Tp, S, Pp), jnp.float32))
+
+    outs = pl.pallas_call(
+        _make_kernel(col_chunk=col_chunk, emit_scan=emit_scan,
+                     emit_cost=emit_cost, emit_freq=emit_freq),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*arrays)
+    outs = list(outs)
+    scan = outs.pop(0)[:, :T, :, :P] if emit_scan else None
+    cost = outs.pop(0)[:, :T, :] if emit_cost else None
+    freq = outs.pop(0)[:T, :, :P] if emit_freq else None
+    return scan, cost, freq

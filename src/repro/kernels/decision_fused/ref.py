@@ -1,0 +1,48 @@
+"""jnp oracle for the fused decision megakernel.
+
+Computes the same three products as
+:func:`repro.kernels.decision_fused.decision_fused.fused_decision_pallas`
+by materializing the broadcast tensors directly — the ground truth the
+kernel is tested against, and the compiled-XLA lane the benchmark times
+when Mosaic is unavailable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_decision(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
+                   p_max: jax.Array, rows: Optional[jax.Array] = None,
+                   inv_totals: Optional[jax.Array] = None,
+                   w_lo: Optional[jax.Array] = None,
+                   w_hi: Optional[jax.Array] = None,
+                   ) -> Tuple[jax.Array, Optional[jax.Array],
+                              Optional[jax.Array]]:
+    """One pass over the packed fleet plane, three decision products.
+
+    * ``scan``: (B, T, S, P) float32 0/1 — frame b's query for tenant t
+      overlaps partition p of candidate state s (the serve-shadow score is
+      the shadow state's lane of this tensor);
+    * ``cost``: (B, T, S) float32 — scanned-row fraction per candidate
+      state, ``sum_p scan * rows * inv_totals`` (``None`` unless ``rows``
+      and ``inv_totals`` are given);
+    * ``freq``: (T, S, P) float32 — fraction of the (W, C) recent-query
+      window scanning each partition, the micro-move planner's ordering
+      signal (``None`` unless ``w_lo``/``w_hi`` are given).
+    """
+    scan = ((p_min[None] <= q_hi[:, :, None, None, :])
+            & (p_max[None] >= q_lo[:, :, None, None, :]))
+    scan = scan.all(axis=-1).astype(jnp.float32)          # (B, T, S, P)
+    cost = None
+    if rows is not None:
+        cost = ((scan * rows[None]).sum(axis=-1)
+                * inv_totals[None])                       # (B, T, S)
+    freq = None
+    if w_lo is not None:
+        wov = ((p_min[None] <= w_hi[:, None, None, None, :])
+               & (p_max[None] >= w_lo[:, None, None, None, :]))
+        freq = wov.all(axis=-1).astype(jnp.float32).mean(axis=0)  # (T, S, P)
+    return scan, cost, freq

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._backend import resolve_interpret
+
 DEFAULT_BT = 8
 DEFAULT_BN = 128
 
@@ -64,10 +66,9 @@ def scan_fleet_pallas(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
     compiled kernel when JAX has an accelerator backend (TPU/GPU), the
     Pallas interpreter on CPU-only hosts.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
     return _scan_fleet_call(q_lo, q_hi, p_min, p_max, bt=bt, bn=bn,
-                            col_chunk=col_chunk, interpret=bool(interpret))
+                            col_chunk=col_chunk,
+                            interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bt", "bn", "col_chunk",

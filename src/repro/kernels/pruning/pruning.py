@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._backend import resolve_interpret
+
 DEFAULT_BQ = 128
 DEFAULT_BP = 128
 
@@ -57,10 +59,9 @@ def scan_matrix_pallas(q_lo: jax.Array, q_hi: jax.Array, p_min: jax.Array,
     accelerator backend (TPU/GPU), the Pallas interpreter on CPU-only hosts
     (where the Mosaic pipeline is unavailable).
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
     return _scan_matrix_call(q_lo, q_hi, p_min, p_max, bq=bq, bp=bp,
-                             col_chunk=col_chunk, interpret=bool(interpret))
+                             col_chunk=col_chunk,
+                             interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bp", "col_chunk",

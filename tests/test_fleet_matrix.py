@@ -13,7 +13,8 @@ from repro.core.workload import make_drift_scenario
 from repro.engine import (Decision, FleetEngine, FleetMatrix,
                           InMemoryBackend, KConcurrentScheduler,
                           LayoutEngine, OreoPolicy, StateMatrix,
-                          TokenBucketScheduler, UnlimitedScheduler)
+                          ThresholdSwitchPolicy, TokenBucketScheduler,
+                          UnlimitedScheduler)
 
 
 def make_meta(rng, partitions, columns, rows_per=50):
@@ -512,3 +513,135 @@ def test_add_tenant_attaches_to_existing_fleet_matrix(tenant_data):
     assert "b" in fleet.fleet_matrix
     fleet.remove_tenant("b")
     assert "b" not in fleet.fleet_matrix
+
+
+# ---------------------------------------------------------------------------
+# pallas_fused backend: golden identity + the dense bulk decide path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ALL_SCENARIOS)
+def test_run_batched_pallas_fused_bit_identical_to_loop(scenario,
+                                                        tenant_data,
+                                                        bounds):
+    """The megakernel backend honours the same bit-identity contract as
+    compute="numpy": the float32 guard routes non-representable operands
+    to the exact path, so fused-backend batched traces equal the stepwise
+    loop under every scheduler."""
+    lo, hi = bounds
+    for _, factory in SCHEDULERS:
+        fs = make_drift_scenario(scenario, lo, hi, num_tenants=3,
+                                 queries_per_tenant=120, seed=7)
+        loop = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                            for tid in fs.tenant_ids}, factory())
+        r_loop = loop.run(fs)
+        batched = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                               for tid in fs.tenant_ids}, factory())
+        r_batched = batched.run_batched(fs, compute="pallas_fused")
+        for tid in fs.tenant_ids:
+            a, b = r_loop.per_tenant[tid], r_batched.per_tenant[tid]
+            assert np.array_equal(a.query_costs, b.query_costs)
+            assert a.reorg_indices == b.reorg_indices
+            assert np.array_equal(a.state_seq, b.state_seq)
+        assert r_loop.swaps_deferred == r_batched.swaps_deferred
+        assert r_loop.deferred_ticks == r_batched.deferred_ticks
+        assert r_loop.scheduler_stats.get("grants") \
+            == r_batched.scheduler_stats.get("grants")
+
+
+def threshold_engine(data, threshold, alpha=10.0, delta=2):
+    space = [build_default_layout(sid, data, 8, sort_col=sid % data.shape[1])
+             for sid in range(3)]
+    return LayoutEngine(ThresholdSwitchPolicy(space, alpha=alpha,
+                                              threshold=threshold),
+                        InMemoryBackend(data), delta=delta)
+
+
+@pytest.mark.parametrize("compute", ["numpy", "pallas_fused"])
+@pytest.mark.parametrize("threshold", [0.0, 0.05, 1e9])
+def test_threshold_bulk_path_bit_identical_to_loop(compute, threshold,
+                                                   tenant_data, bounds):
+    """Batch-decidable fleet (every policy implements decide_frames): the
+    bulk decide path commits whole passes without per-event Python, and
+    passes with switch/swap activity fall back — traces stay bit-identical
+    to the loop under every scheduler, with and without reorgs."""
+    lo, hi = bounds
+    for _, factory in SCHEDULERS:
+        fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=3,
+                                 queries_per_tenant=120, seed=13)
+        loop = FleetEngine({tid: threshold_engine(tenant_data[tid],
+                                                  threshold)
+                            for tid in fs.tenant_ids}, factory())
+        r_loop = loop.run(fs)
+        batched = FleetEngine({tid: threshold_engine(tenant_data[tid],
+                                                     threshold)
+                               for tid in fs.tenant_ids}, factory())
+        r_batched = batched.run_batched(fs, compute=compute)
+        for tid in fs.tenant_ids:
+            a, b = r_loop.per_tenant[tid], r_batched.per_tenant[tid]
+            assert np.array_equal(a.query_costs, b.query_costs)
+            assert a.reorg_indices == b.reorg_indices
+            assert np.array_equal(a.state_seq, b.state_seq)
+        assert r_loop.swaps_deferred == r_batched.swaps_deferred
+        assert r_loop.scheduler_stats.get("grants") \
+            == r_batched.scheduler_stats.get("grants")
+
+
+def test_bulk_path_engages_without_per_event_decide(tenant_data, bounds,
+                                                    monkeypatch):
+    """On a switch-free stretch the whole run must resolve through
+    decide_frames — a single decide() call means the bulk path silently
+    disengaged."""
+    lo, hi = bounds
+    fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=3,
+                             queries_per_tenant=100, seed=17)
+
+    def boom(self, index, query, backend):
+        raise AssertionError("bulk path disengaged: decide() was called")
+
+    monkeypatch.setattr(ThresholdSwitchPolicy, "decide", boom)
+    fleet = FleetEngine({tid: threshold_engine(tenant_data[tid], 1e9,
+                                               delta=0)
+                         for tid in fs.tenant_ids})
+    result = fleet.run_batched(fs)
+    assert all(len(r.query_costs) == 100
+               for r in result.per_tenant.values())
+
+
+def test_bulk_path_runs_megakernel_on_f32_exact_data(monkeypatch):
+    """float32-exact plane + queries under compute="pallas_fused": the
+    megakernel actually scores the passes (no silent numpy fallback), and
+    the trace still equals the stepwise loop bit for bit."""
+    from repro.engine import compute as engine_compute
+    rng = np.random.default_rng(23)
+    data = {f"t{t}": rng.uniform(0, 100, size=(2_000, 4)).astype(
+        np.float32).astype(np.float64) for t in range(3)}
+    events = []
+    for i in range(90):
+        for tid in data:
+            lo = np.full(4, -np.inf)
+            hi = np.full(4, np.inf)
+            col = (i + int(tid[1])) % 4
+            a, b = np.sort(rng.uniform(0, 100, size=2).astype(
+                np.float32).astype(np.float64))
+            lo[col], hi[col] = a, b
+            events.append((tid, wl.Query(lo=lo, hi=hi)))
+    loop = FleetEngine({tid: threshold_engine(d, 0.05) for tid, d
+                        in data.items()})
+    r_loop = loop.run(events)
+    calls = []
+    real = engine_compute.fused_frames_scan
+
+    def spy(*args, **kw):
+        calls.append(1)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(engine_compute, "fused_frames_scan", spy)
+    batched = FleetEngine({tid: threshold_engine(d, 0.05) for tid, d
+                           in data.items()})
+    r_batched = batched.run_batched(events, compute="pallas_fused")
+    assert calls, "megakernel never ran on f32-exact operands"
+    for tid in data:
+        a, b = r_loop.per_tenant[tid], r_batched.per_tenant[tid]
+        assert np.array_equal(a.query_costs, b.query_costs)
+        assert a.reorg_indices == b.reorg_indices
+        assert np.array_equal(a.state_seq, b.state_seq)

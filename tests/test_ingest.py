@@ -648,3 +648,28 @@ def test_disk_backend_wal_records_incremental_migration(tmp_path):
                                "manifest.json")) as f:
             assert final["manifest"] == json.load(f)
     backend.close()
+
+
+@pytest.mark.parametrize("scenario", sorted(INGEST_SCENARIOS))
+def test_fleet_mixed_stream_pallas_fused_bit_identical(scenario,
+                                                       tenant_data,
+                                                       bounds):
+    """Every ingest scenario under the megakernel batched backend: the
+    float32 guard keeps the fused pass exact, so mixed query/append
+    traces (compactions included) equal the stepwise loop bit for bit."""
+    lo, hi = bounds
+    fs = make_ingest_scenario(scenario, lo, hi, num_tenants=2,
+                              queries_per_tenant=100, seed=9)
+
+    def build():
+        return FleetEngine({tid: simple_engine(tenant_data[tid],
+                                               ingest=IngestConfig())
+                            for tid in fs.tenant_ids}, UnlimitedScheduler())
+
+    loop, batched = build(), build()
+    rl = loop.run(fs)
+    rb = batched.run_batched(fs, compute="pallas_fused")
+    for tid in fs.tenant_ids:
+        assert_same_trace(rl.per_tenant[tid], rb.per_tenant[tid])
+        assert (loop.tenant(tid).compaction_indices
+                == batched.tenant(tid).compaction_indices)

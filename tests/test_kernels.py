@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import _backend
+from repro.kernels.decision_fused import decision_fused as df
+from repro.kernels.decision_fused import ops as df_ops
+from repro.kernels.decision_fused import ref as df_ref
 from repro.kernels.flash_attention import flash_attention as fa
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
@@ -389,3 +393,172 @@ def test_flash_attention_prefix_lm():
     want = fa_ref.attention(q, k, v, causal=True, prefix_len=32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# decision_fused megakernel (scan + serve-shadow cost + move freq, one pass)
+# ---------------------------------------------------------------------------
+
+def _fused_case(B, T, S, P, C, W, seed):
+    rng = np.random.default_rng(seed)
+    p_min = rng.uniform(0, 1, (T, S, P, C)).astype(np.float32)
+    p_max = p_min + rng.uniform(0, 0.5, (T, S, P, C)).astype(np.float32)
+    q_lo = rng.uniform(0, 1, (B, T, C)).astype(np.float32)
+    q_hi = q_lo + rng.uniform(0, 0.5, (B, T, C)).astype(np.float32)
+    rows = rng.integers(1, 1000, (T, S, P)).astype(np.float32)
+    inv = (1.0 / np.maximum(rows.sum(-1), 1.0)).astype(np.float32)
+    w_lo = rng.uniform(0, 1, (W, C)).astype(np.float32)
+    w_hi = w_lo + rng.uniform(0, 0.5, (W, C)).astype(np.float32)
+    return q_lo, q_hi, p_min, p_max, rows, inv, w_lo, w_hi
+
+
+def _assert_fused_triple(got, want):
+    g_scan, g_cost, g_freq = got
+    w_scan, w_cost, w_freq = want
+    np.testing.assert_array_equal(np.asarray(g_scan), np.asarray(w_scan))
+    np.testing.assert_allclose(np.asarray(g_cost), np.asarray(w_cost),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(g_freq), np.asarray(w_freq),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("B,T,S,P,C,W", [
+    (1, 1, 1, 1, 1, 1), (2, 3, 2, 8, 4, 4), (4, 8, 3, 16, 6, 8),
+    (3, 5, 4, 33, 5, 7), (2, 4, 2, 128, 8, 16),
+])
+def test_fused_decision_matches_ref(B, T, S, P, C, W):
+    ops = _fused_case(B, T, S, P, C, W, B * 1000 + T * 100 + P)
+    got = df.fused_decision_pallas(*ops, interpret=True)
+    want = df_ref.fused_decision(*[jnp.asarray(a) for a in ops])
+    _assert_fused_triple(got, want)
+
+
+@pytest.mark.parametrize("B,T,S,P,C,W,bt,bp,col_chunk", [
+    (2, 17, 2, 130, 7, 4, 4, 128, 8),   # T and P ragged vs the block sizes
+    (3, 5, 3, 33, 5, 6, 2, 16, 2),      # ragged everywhere, C % chunk != 0
+    (2, 8, 2, 64, 9, 8, 4, 32, 4),      # C not a multiple of col_chunk
+    (1, 1, 1, 3, 1, 1, 4, 128, 8),      # tiny: blocks clamp to the problem
+    (2, 8, 2, 128, 8, 4, 4, 128, 8),    # exact multiples (no padding)
+])
+def test_fused_decision_ragged_padding_parity(B, T, S, P, C, W, bt, bp,
+                                              col_chunk):
+    """Megakernel == jnp oracle on every ragged T/P/C padding edge, with
+    interpret auto-selected (None -> interpreter on CPU-only hosts)."""
+    ops = _fused_case(B, T, S, P, C, W, T * 7919 + P * 31 + C)
+    got = df.fused_decision_pallas(*ops, bt=bt, bp=bp, col_chunk=col_chunk,
+                                   interpret=None)
+    want = df_ref.fused_decision(*[jnp.asarray(a) for a in ops])
+    _assert_fused_triple(got, want)
+
+
+def test_fused_decision_partial_outputs():
+    """Outputs not requested come back None; the requested ones are
+    unchanged by which siblings ride along."""
+    q_lo, q_hi, p_min, p_max, rows, inv, w_lo, w_hi = _fused_case(
+        2, 4, 2, 20, 4, 6, 55)
+    full = df.fused_decision_pallas(q_lo, q_hi, p_min, p_max, rows, inv,
+                                    w_lo, w_hi, interpret=True)
+    scan_only = df.fused_decision_pallas(q_lo, q_hi, p_min, p_max,
+                                         interpret=True)
+    assert scan_only[1] is None and scan_only[2] is None
+    np.testing.assert_array_equal(np.asarray(scan_only[0]),
+                                  np.asarray(full[0]))
+    cost_only = df.fused_decision_pallas(q_lo, q_hi, p_min, p_max, rows,
+                                         inv, emit_scan=False,
+                                         interpret=True)
+    assert cost_only[0] is None and cost_only[2] is None
+    np.testing.assert_array_equal(np.asarray(cost_only[1]),
+                                  np.asarray(full[1]))
+    freq_only = df.fused_decision_pallas(q_lo, q_hi, p_min, p_max,
+                                         w_lo=w_lo, w_hi=w_hi,
+                                         emit_scan=False, interpret=True)
+    assert freq_only[0] is None and freq_only[1] is None
+    np.testing.assert_array_equal(np.asarray(freq_only[2]),
+                                  np.asarray(full[2]))
+    with pytest.raises(ValueError, match="nothing to emit"):
+        df.fused_decision_pallas(q_lo, q_hi, p_min, p_max, emit_scan=False,
+                                 interpret=True)
+
+
+def test_fused_decision_matches_three_separate_kernels():
+    """The megakernel's three outputs == the three kernels it fuses,
+    bit for bit on the 0/1 scan and to float tolerance on the reductions."""
+    B, T, S, P, C, W = 3, 6, 2, 40, 5, 8
+    q_lo, q_hi, p_min, p_max, rows, inv, w_lo, w_hi = _fused_case(
+        B, T, S, P, C, W, 99)
+    scan, cost, freq = df.fused_decision_pallas(
+        q_lo, q_hi, p_min, p_max, rows, inv, w_lo, w_hi, interpret=True)
+    scan = np.asarray(scan)
+    # scan: one fleet_scan launch per frame over the (T, S*P, C) plane
+    pm2 = p_min.reshape(T, S * P, C)
+    px2 = p_max.reshape(T, S * P, C)
+    for b in range(B):
+        sep = fleet_scan.scan_fleet_pallas(q_lo[b], q_hi[b], pm2, px2,
+                                           interpret=True)
+        np.testing.assert_array_equal(
+            scan[b], np.asarray(sep).reshape(T, S, P))
+    # scan again: one pruning launch per (frame, tenant, state) table
+    for t in range(T):
+        for s in range(S):
+            single = pruning.scan_matrix_pallas(
+                q_lo[:, t], q_hi[:, t], p_min[t, s], p_max[t, s],
+                interpret=True)
+            np.testing.assert_array_equal(scan[:, t, s], np.asarray(single))
+    # cost: the scanned-row fraction the scan implies
+    want_cost = (scan * rows[None]).sum(-1) * inv[None]
+    np.testing.assert_allclose(np.asarray(cost), want_cost, rtol=1e-6,
+                               atol=1e-7)
+    # freq: one move_score launch per tenant over the shared window
+    for t in range(T):
+        sep = move_score.move_scores_pallas(w_lo, w_hi, p_min[t], p_max[t],
+                                            interpret=True)
+        np.testing.assert_allclose(np.asarray(freq)[t], np.asarray(sep),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fused_ops_wrapper_dispatches():
+    ops = _fused_case(2, 3, 2, 12, 4, 5, 7)
+    via_kernel = df_ops.fused_decision(*ops, use_kernel=True,
+                                       interpret=True)
+    via_oracle = df_ops.fused_decision(*ops, use_kernel=False)
+    _assert_fused_triple(via_kernel, via_oracle)
+
+
+# ---------------------------------------------------------------------------
+# shared interpret auto-detection (_backend.resolve_interpret)
+# ---------------------------------------------------------------------------
+
+def test_resolve_interpret_explicit_passthrough():
+    assert _backend.resolve_interpret(True) is True
+    assert _backend.resolve_interpret(False) is False
+
+
+def test_resolve_interpret_follows_detected_backend(monkeypatch):
+    """interpret=None compiles on accelerators and interprets on CPU-only
+    hosts — the seam every kernel shares."""
+    monkeypatch.setattr(_backend, "default_backend", lambda: "tpu")
+    assert _backend.resolve_interpret(None) is False
+    monkeypatch.setattr(_backend, "default_backend", lambda: "gpu")
+    assert _backend.resolve_interpret(None) is False
+    monkeypatch.setattr(_backend, "default_backend", lambda: "cpu")
+    assert _backend.resolve_interpret(None) is True
+
+
+def test_all_kernels_share_backend_seam(monkeypatch):
+    """Monkeypatching the one detected-backend seam changes auto-detect
+    for every kernel module (no copy-pasted detection left behind)."""
+    calls = []
+
+    def spy():
+        calls.append(1)
+        return "cpu"
+
+    monkeypatch.setattr(_backend, "default_backend", spy)
+    q_lo, q_hi, p_min, p_max = _fleet_case(2, 8, 3, 3)
+    fleet_scan.scan_fleet_pallas(q_lo, q_hi, p_min, p_max, interpret=None)
+    move_score.move_scores_pallas(q_lo, q_hi, p_min, p_max, interpret=None)
+    pruning.scan_matrix_pallas(q_lo, q_hi, p_min[0], p_max[0],
+                               interpret=None)
+    df.fused_decision_pallas(q_lo[None], q_hi[None], p_min[:, None],
+                             p_max[:, None], interpret=None)
+    assert len(calls) >= 4

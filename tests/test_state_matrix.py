@@ -173,3 +173,77 @@ def test_unknown_compute_backend_rejected():
         StateMatrix(compute_backend="cuda")
     with pytest.raises(ValueError):
         InMemoryBackend(np.zeros((4, 2)), compute="nope")
+
+
+# ---------------------------------------------------------------------------
+# float32 downcast guard on the kernel compute backends
+# ---------------------------------------------------------------------------
+
+def test_float32_exact_predicate():
+    from repro.engine import compute
+    assert compute.float32_exact(np.array([0.5, 1.0, -np.inf, np.inf]))
+    assert compute.float32_exact(np.ones(3, np.float32))
+    # one ulp above 1.0 in float64 is strictly between float32 neighbours
+    assert not compute.float32_exact(np.array([np.nextafter(1.0, 2.0)]))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+def test_scan_matrix_f32_downcast_warns_and_stays_exact(backend):
+    """A bound that is not exactly float32-representable must not be
+    silently downcast: the kernel path warns and returns the exact numpy
+    answer (regression test for the silent-float32 scan_matrix bug)."""
+    from repro.engine import compute
+    rng = np.random.default_rng(8)
+    P, C, Q = 10, 4, 6
+    p_min = rng.uniform(0, 1, (P, C)).astype(np.float32).astype(np.float64)
+    p_max = p_min + 0.25
+    q_lo = np.zeros((Q, C))
+    q_hi = np.ones((Q, C))
+    # exactly unrepresentable: sits between p_max's float32 neighbours, so
+    # the old downcast flipped overlap verdicts at the boundary
+    q_hi[0, 0] = np.nextafter(1.0, 2.0)
+    want = compute.scan_matrix(q_lo, q_hi, p_min, p_max, backend="numpy")
+    with pytest.warns(RuntimeWarning, match="float32"):
+        got = compute.scan_matrix(q_lo, q_hi, p_min, p_max, backend=backend)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+def test_fleet_scan_matrix_f32_downcast_warns_and_stays_exact(backend):
+    from repro.engine import compute
+    rng = np.random.default_rng(9)
+    T, N, C = 3, 8, 4
+    mins = rng.uniform(0, 1, (T, N, C)).astype(np.float32).astype(np.float64)
+    maxs = mins + 0.25
+    q_lo = np.zeros((T, C))
+    q_hi = np.ones((T, C))
+    mins[1, 3, 2] = np.nextafter(0.5, 1.0)      # not float32-exact
+    want = compute.fleet_scan_matrix(q_lo, q_hi, mins, maxs,
+                                     backend="numpy")
+    with pytest.warns(RuntimeWarning, match="float32"):
+        got = compute.fleet_scan_matrix(q_lo, q_hi, mins, maxs,
+                                        backend=backend)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_fused_compute_backend_parity():
+    """StateMatrix estimates under the megakernel backend == numpy on
+    f32-representable data (same contract as the ``pallas`` backend)."""
+    rng = np.random.default_rng(10)
+    c = 6
+    data = rng.uniform(0, 1, (2000, c)).astype(np.float32).astype(np.float64)
+    sm_np = StateMatrix()
+    sm_fu = StateMatrix(compute_backend="pallas_fused")
+    for i in range(3):
+        order = np.argsort(data[:, i % c], kind="stable")
+        assignment = np.empty(len(data), dtype=np.int64)
+        assignment[order] = np.arange(len(data)) * 16 // len(data)
+        meta = layouts.metadata_from_assignment(data, assignment, 16)
+        sm_np.register(i, meta)
+        sm_fu.register(i, meta)
+    for _ in range(5):
+        lo, hi = make_query(rng, c)
+        lo = lo.astype(np.float32).astype(np.float64)
+        hi = hi.astype(np.float32).astype(np.float64)
+        np.testing.assert_allclose(sm_fu.estimate(lo, hi),
+                                   sm_np.estimate(lo, hi), atol=1e-12)
