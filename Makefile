@@ -8,7 +8,8 @@ BENCH_DIR ?= .bench
 .PHONY: test test-kernels lint bench bench-full bench-smoke bench-gate \
         bench-fleet-smoke bench-fleet-gate bench-reorg-smoke \
         bench-reorg-gate bench-ingest-smoke bench-ingest-gate \
-        bench-kernels-smoke bench-kernels-gate quickstart install
+        bench-kernels-smoke bench-kernels-gate bench-serving-smoke \
+        bench-serving-gate quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -38,6 +39,7 @@ bench-full:
 	$(PYTHON) benchmarks/bench_reorg.py --out $(BENCH_DIR)/BENCH_reorg.json
 	$(PYTHON) benchmarks/bench_ingest.py --out $(BENCH_DIR)/BENCH_ingest.json
 	$(PYTHON) benchmarks/bench_kernels.py --out $(BENCH_DIR)/BENCH_kernels.json
+	$(PYTHON) benchmarks/bench_serving.py --out $(BENCH_DIR)/BENCH_serving.json
 
 bench-smoke:
 	mkdir -p $(BENCH_DIR)
@@ -73,6 +75,13 @@ bench-kernels-smoke:
 
 bench-kernels-gate: bench-kernels-smoke
 	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_kernels_smoke.json --baseline BENCH_kernels.json
+
+bench-serving-smoke:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_serving.py --smoke --out $(BENCH_DIR)/bench_serving_smoke.json
+
+bench-serving-gate: bench-serving-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_serving_smoke.json --baseline BENCH_serving.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -158,7 +158,7 @@ def bench_sweep_cell(num_tenants: int, rows: int, cols: int, num_states: int,
     events = []
     for k in range(queries_per_tenant):
         for tid in tids:
-            events.append((tid, queries[tid][k]))
+            events.append(wl.QueryEvent(tid, queries[tid][k]))
 
     def fresh_fleet() -> FleetEngine:
         return FleetEngine(

@@ -23,7 +23,14 @@ benchmark families:
   of the pre-megakernel separate passes (per-frame ``fleet_scan``
   launches + reduction + per-tenant ``move_score``) divided by the fused
   decision pass on identical operands (section ``fused_vs_separate``;
-  ratio > 1 means the fused dataflow is paying off).
+  ratio > 1 means the fused dataflow is paying off);
+* ``bench_serving.py --smoke`` vs ``BENCH_serving.json`` — the serving
+  front end's sustained QPS divided by the direct engine loop on the
+  same stream (section ``serving_qps_ratio``, floor-gated: overhead
+  creep in the serving tier drags it down), and its p99/p50 latency
+  tail amplification (section ``latency_tail``, **ceiling-gated**: a
+  stall on a fraction of events inflates the tail while barely moving
+  the QPS ratio).
 
 Raw queries/sec are not comparable across machines, so the gate checks
 **ratios**, both sides measured in the same process on the same runner:
@@ -33,7 +40,9 @@ benchmark seeds, so any drop is a behavioral regression rather than
 machine noise.
 
 Fails (exit 1) if, for any config x mode present in both files, the
-fresh speedup falls below ``(1 - tolerance)`` of the baseline speedup.
+fresh floor-section ratio falls below ``(1 - tolerance)`` of the
+baseline, or a ceiling-section ratio rises above ``(1 + tolerance)``
+of the baseline.
 Baselines prefer a dedicated smoke section (``smoke_baseline`` /
 ``fleet_smoke``: same smoke configuration, minimum over several runs on
 the reference machine); top-level sections from the full sweep fill in
@@ -54,25 +63,30 @@ import json
 import os
 import sys
 
-#: Sections holding {config_key: {mode: ratio}} grids, per family.
+#: Floor-gated sections holding {config_key: {mode: ratio}} grids, per
+#: family: bigger is better, the gate fails when a ratio drops.
 SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop",
             "cost_ratio_atomic_over_incremental",
-            "cost_ratio_vs_debt_aware", "fused_vs_separate")
+            "cost_ratio_vs_debt_aware", "fused_vs_separate",
+            "serving_qps_ratio")
+#: Ceiling-gated sections: smaller is better (latency tails), the gate
+#: fails when a ratio rises above (1 + tolerance) * baseline.
+CEILING_SECTIONS = ("latency_tail",)
 #: Dedicated smoke-baseline sections a checked-in file may carry; their
 #: grids win over the top-level (full-sweep) numbers for shared keys.
 SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke", "reorg_smoke",
-                  "ingest_smoke", "kernels_smoke")
+                  "ingest_smoke", "kernels_smoke", "serving_smoke")
 
 
-def load_speedups(payload: dict, prefer_smoke: bool) -> dict:
-    """{config_key: {mode: speedup}} from a benchmark payload."""
+def load_grids(payload: dict, sections, prefer_smoke: bool) -> dict:
+    """{config_key: {mode: ratio}} merged over ``sections``."""
     out = {}
-    for section in SECTIONS:
+    for section in sections:
         out.update(payload.get(section, {}))
     if prefer_smoke:
         for smoke_name in SMOKE_SECTIONS:
             smoke = payload.get(smoke_name, {})
-            for section in SECTIONS:
+            for section in sections:
                 out.update(smoke.get(section, {}))     # smoke wins
     return out
 
@@ -92,15 +106,23 @@ def main() -> int:
     args = ap.parse_args()
 
     with open(args.fresh) as f:
-        fresh = load_speedups(json.load(f), prefer_smoke=False)
+        fresh_payload = json.load(f)
     with open(args.baseline) as f:
-        base = load_speedups(json.load(f), prefer_smoke=True)
+        base_payload = json.load(f)
+    fresh = load_grids(fresh_payload, SECTIONS, prefer_smoke=False)
+    base = load_grids(base_payload, SECTIONS, prefer_smoke=True)
+    fresh_ceil = load_grids(fresh_payload, CEILING_SECTIONS,
+                            prefer_smoke=False)
+    base_ceil = load_grids(base_payload, CEILING_SECTIONS,
+                           prefer_smoke=True)
 
     shared = sorted(set(fresh) & set(base))
-    if not shared:
+    shared_ceil = sorted(set(fresh_ceil) & set(base_ceil))
+    if not shared and not shared_ceil:
         print(f"regression gate: no overlapping configs between "
-              f"{args.fresh} ({sorted(fresh)}) and "
-              f"{args.baseline} ({sorted(base)})", file=sys.stderr)
+              f"{args.fresh} ({sorted(fresh) + sorted(fresh_ceil)}) and "
+              f"{args.baseline} ({sorted(base) + sorted(base_ceil)})",
+              file=sys.stderr)
         return 1
 
     failed = False
@@ -113,9 +135,19 @@ def main() -> int:
                   f"(baseline x{want:.2f}, floor x{floor:.2f}) {verdict}")
             if got < floor:
                 failed = True
+    for key in shared_ceil:
+        for mode in sorted(set(fresh_ceil[key]) & set(base_ceil[key])):
+            got, want = fresh_ceil[key][mode], base_ceil[key][mode]
+            ceiling = (1.0 + args.tolerance) * want
+            verdict = "ok" if got <= ceiling else "REGRESSION"
+            print(f"  {key}/{mode}: ratio x{got:.2f} "
+                  f"(baseline x{want:.2f}, ceiling x{ceiling:.2f}) "
+                  f"{verdict}")
+            if got > ceiling:
+                failed = True
     if failed:
-        print(f"regression gate FAILED: speedup dropped more "
-              f"than {args.tolerance:.0%} below the checked-in baseline "
+        print(f"regression gate FAILED: a gated ratio moved more "
+              f"than {args.tolerance:.0%} past the checked-in baseline "
               f"({args.baseline})", file=sys.stderr)
         return 1
     print("regression gate passed")

@@ -16,8 +16,9 @@ churn — the workload conditions a multi-tenant fleet
 from __future__ import annotations
 
 import dataclasses
-from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
-                    Tuple)
+import warnings
+from typing import (Callable, Dict, Iterator, List, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -42,6 +43,68 @@ def stack_queries(queries: Sequence[Query]) -> Tuple[np.ndarray, np.ndarray]:
     lo = np.stack([q.lo for q in queries])
     hi = np.stack([q.hi for q in queries])
     return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# The typed event envelope (the fleet-level request API)
+# ---------------------------------------------------------------------------
+
+class QueryEvent(NamedTuple):
+    """One tenant's range query, addressed to the fleet.
+
+    A ``NamedTuple`` on purpose: it *is* the legacy ``(tenant_id, query)``
+    pair, so streams of typed events unpack, index and compare exactly like
+    the tuples they replace — only construction gained a type.
+    """
+
+    tenant_id: str
+    query: Query
+
+
+class IngestEvent(NamedTuple):
+    """One tenant's append batch, addressed to the fleet.
+
+    Tuple-compatible with the legacy ``(tenant_id, IngestBatch)`` pair,
+    like :class:`QueryEvent`.
+    """
+
+    tenant_id: str
+    batch: "IngestBatch"
+
+
+#: The fleet's one request envelope: every entry point
+#: (:meth:`repro.engine.FleetEngine.submit`, ``run``, ``run_batched``,
+#: :class:`repro.serve.ServeFrontend`) consumes this union.
+Event = Union[QueryEvent, IngestEvent]
+
+
+def as_event(obj) -> Event:
+    """Coerce a request into the typed :data:`Event` union.
+
+    Typed events pass through untouched.  Legacy bare ``(tenant_id,
+    Query)`` / ``(tenant_id, IngestBatch)`` pairs still work but raise a
+    :class:`DeprecationWarning` — construct :class:`QueryEvent` /
+    :class:`IngestEvent` instead.
+    """
+    if isinstance(obj, (QueryEvent, IngestEvent)):
+        return obj
+    if isinstance(obj, (tuple, list)) and len(obj) == 2:
+        tid, payload = obj
+        if isinstance(payload, Query):
+            warnings.warn(
+                "bare (tenant_id, Query) event tuples are deprecated; "
+                "pass repro.core.workload.QueryEvent(tenant_id, query)",
+                DeprecationWarning, stacklevel=3)
+            return QueryEvent(str(tid), payload)
+        if isinstance(payload, IngestBatch):
+            warnings.warn(
+                "bare (tenant_id, IngestBatch) event tuples are deprecated; "
+                "pass repro.core.workload.IngestEvent(tenant_id, batch)",
+                DeprecationWarning, stacklevel=3)
+            return IngestEvent(str(tid), payload)
+    raise TypeError(
+        f"not a fleet event: {obj!r} (expected QueryEvent, IngestEvent, or "
+        f"a legacy (tenant_id, Query|IngestBatch) pair)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,21 +213,22 @@ def generate_workload(templates: Sequence[QueryTemplate],
 class FleetStream:
     """An interleaved multi-tenant workload with per-tenant ground truth.
 
-    ``events`` is the fleet-level stream of ``(tenant_id, query)`` pairs in
-    arrival order; ``per_tenant`` holds each tenant's queries *in the same
+    ``events`` is the fleet-level stream of :class:`QueryEvent`\\ s in
+    arrival order (tuple-compatible with the legacy ``(tenant_id, query)``
+    pairs); ``per_tenant`` holds each tenant's queries *in the same
     relative order* as an ordinary :class:`WorkloadStream` (with its own
     segmentation), so a tenant's standalone run over ``per_tenant[tid]`` is
     the golden reference for its fleet trace.
     """
 
     scenario: str
-    events: List[Tuple[str, Query]]
+    events: List[QueryEvent]
     per_tenant: Dict[str, WorkloadStream]
 
     def __len__(self) -> int:
         return len(self.events)
 
-    def __iter__(self) -> Iterator[Tuple[str, Query]]:
+    def __iter__(self) -> Iterator[QueryEvent]:
         return iter(self.events)
 
     @property
@@ -221,7 +285,7 @@ def _stream_from_plan(plan: Sequence[Tuple[QueryTemplate, int]],
 
 def interleave_streams(per_tenant: Dict[str, WorkloadStream],
                        weight_fn: Optional[Callable[[str, int], float]] = None,
-                       ) -> List[Tuple[str, Query]]:
+                       ) -> List[QueryEvent]:
     """Deterministic weighted-fair interleave of per-tenant streams.
 
     Smooth weighted round-robin: each pick adds every live tenant's current
@@ -234,7 +298,7 @@ def interleave_streams(per_tenant: Dict[str, WorkloadStream],
     tids = sorted(per_tenant)
     cursors = {tid: 0 for tid in tids}
     credits = {tid: 0.0 for tid in tids}
-    events: List[Tuple[str, Query]] = []
+    events: List[QueryEvent] = []
     total = sum(len(s) for s in per_tenant.values())
     for _ in range(total):
         live = [t for t in tids if cursors[t] < len(per_tenant[t].queries)]
@@ -244,7 +308,7 @@ def interleave_streams(per_tenant: Dict[str, WorkloadStream],
             credits[t] += weights[t]
         pick = max(live, key=lambda t: credits[t])
         credits[pick] -= sum(weights.values())
-        events.append((pick, per_tenant[pick].queries[cursors[pick]]))
+        events.append(QueryEvent(pick, per_tenant[pick].queries[cursors[pick]]))
         cursors[pick] += 1
     return events
 
@@ -428,20 +492,21 @@ class IngestBatch:
 class IngestStream:
     """An interleaved multi-tenant stream mixing queries and appends.
 
-    ``events`` is the fleet-level arrival order of ``(tenant_id, event)``
-    pairs where an event is a :class:`Query` or an :class:`IngestBatch`;
+    ``events`` is the fleet-level arrival order of typed :data:`Event`
+    envelopes (:class:`QueryEvent` / :class:`IngestEvent`, each
+    tuple-compatible with the legacy ``(tenant_id, payload)`` pairs);
     ``per_tenant`` preserves each tenant's own event order (the golden
     reference for a standalone replay of that tenant).
     """
 
     scenario: str
-    events: List[Tuple[str, object]]
+    events: List[Event]
     per_tenant: Dict[str, List[object]]
 
     def __len__(self) -> int:
         return len(self.events)
 
-    def __iter__(self) -> Iterator[Tuple[str, object]]:
+    def __iter__(self) -> Iterator[Event]:
         return iter(self.events)
 
     @property
@@ -491,7 +556,7 @@ def make_ingest_scenario(name: str, col_lo: np.ndarray, col_hi: np.ndarray,
 def interleave_event_streams(per_tenant: Dict[str, List[object]],
                              weight_fn: Optional[Callable[[str, int],
                                                           float]] = None,
-                             ) -> List[Tuple[str, object]]:
+                             ) -> List[Event]:
     """Smooth-WRR interleave of per-tenant *mixed* event lists.
 
     Identical discipline to :func:`interleave_streams` (same credits, same
@@ -502,7 +567,7 @@ def interleave_event_streams(per_tenant: Dict[str, List[object]],
     tids = sorted(per_tenant)
     cursors = {tid: 0 for tid in tids}
     credits = {tid: 0.0 for tid in tids}
-    events: List[Tuple[str, object]] = []
+    events: List[Event] = []
     total = sum(len(s) for s in per_tenant.values())
     for _ in range(total):
         live = [t for t in tids if cursors[t] < len(per_tenant[t])]
@@ -512,7 +577,10 @@ def interleave_event_streams(per_tenant: Dict[str, List[object]],
             credits[t] += weights[t]
         pick = max(live, key=lambda t: credits[t])
         credits[pick] -= sum(weights.values())
-        events.append((pick, per_tenant[pick][cursors[pick]]))
+        payload = per_tenant[pick][cursors[pick]]
+        events.append(QueryEvent(pick, payload)
+                      if isinstance(payload, Query)
+                      else IngestEvent(pick, payload))
         cursors[pick] += 1
     return events
 

@@ -25,11 +25,18 @@ Layers:
   pluggable compute (:func:`repro.engine.compute.scan_matrix`: ``numpy``
   exact / ``pallas`` kernel).
 * :class:`FleetEngine` — multi-tenant layer: N engines over one
-  interleaved ``(tenant_id, query)`` stream, physical reorganization
-  arbitrated by a :class:`ReorgScheduler`
-  (:class:`UnlimitedScheduler` / :class:`KConcurrentScheduler` /
-  :class:`TokenBucketScheduler`), with drift scenarios in
-  :data:`repro.core.workload.DRIFT_SCENARIOS`.
+  interleaved stream of typed events (:class:`QueryEvent` /
+  :class:`IngestEvent`, re-exported here from
+  :mod:`repro.core.workload`), fed through the single
+  :meth:`FleetEngine.submit` / :meth:`FleetEngine.drain` entry point
+  (``run`` / ``run_batched`` are drivers over it; legacy bare
+  ``(tenant_id, payload)`` tuples still coerce, with a
+  :class:`DeprecationWarning`).  Physical reorganization is arbitrated
+  by a :class:`ReorgScheduler` (:class:`UnlimitedScheduler` /
+  :class:`KConcurrentScheduler` / :class:`TokenBucketScheduler`), with
+  drift scenarios in :data:`repro.core.workload.DRIFT_SCENARIOS`.  The
+  traffic-facing tier above this — admission control, load shedding,
+  versioned caching — lives in :mod:`repro.serve`.
 * :mod:`repro.engine.reorg` — the incremental reorganization plane:
   ``LayoutEngine(..., incremental=True)`` turns each charged
   reorganization into a planned sequence of micro-moves
@@ -58,6 +65,7 @@ Layers:
   (:func:`repro.engine.compute.fleet_scan_matrix`: ``numpy`` exact /
   ``pallas`` kernel) with traces bit-identical to the stepwise loop.
 """
+from repro.core.workload import Event, IngestEvent, QueryEvent, as_event
 from repro.engine.backends import DiskBackend, InMemoryBackend, StorageBackend
 from repro.engine.compute import fleet_scan_matrix, scan_matrix
 from repro.engine.core import LayoutEngine, StepResult
@@ -77,12 +85,14 @@ from repro.engine.state_matrix import StateMatrix
 __all__ = [
     "BatchablePolicy",
     "DebtMeter", "Decision", "DeltaBatch", "DeltaLog", "DiskBackend",
-    "FleetEngine", "FleetMatrix", "FleetResult",
+    "Event", "FleetEngine", "FleetMatrix", "FleetResult",
     "FleetStepResult", "GreedyPolicy", "InMemoryBackend", "IngestConfig",
-    "KConcurrentScheduler", "LayoutEngine", "MTSOptimalPolicy", "MicroMove",
+    "IngestEvent", "KConcurrentScheduler", "LayoutEngine",
+    "MTSOptimalPolicy", "MicroMove",
     "MigrationPlan", "MigrationRecord", "OfflineOptimalPolicy", "OreoPolicy",
-    "Policy", "RegretPolicy", "ReorgExecutor", "ReorgScheduler",
+    "Policy", "QueryEvent", "RegretPolicy", "ReorgExecutor",
+    "ReorgScheduler",
     "StateMatrix", "StaticPolicy", "StepResult", "StorageBackend",
     "ThresholdSwitchPolicy", "TokenBucketScheduler", "UnlimitedScheduler",
-    "fleet_scan_matrix", "plan_migration", "scan_matrix",
+    "as_event", "fleet_scan_matrix", "plan_migration", "scan_matrix",
 ]

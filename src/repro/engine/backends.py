@@ -12,6 +12,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import numpy as np
@@ -443,7 +444,7 @@ class InMemoryBackend(_RegistryMixin):
             out = {s: float(costs[m.slot(s)]) for s in state_ids}
         else:
             out = self._primed_dict(costs, state_ids)
-        if self.serve_primable and self.SERVING_SHADOW in m:
+        if self._serve_primable and self.SERVING_SHADOW in m:
             # The shadow serving state rode along in the same packed pass:
             # remember its score so serve() on this query is a lookup.
             # (exact-estimate computes only — the unguarded pallas plane
@@ -466,7 +467,7 @@ class InMemoryBackend(_RegistryMixin):
                 and primed[1] == version):
             return primed[2]
         costs = m.estimate(query.lo, query.hi)
-        if self.serve_primable:
+        if self._serve_primable:
             shadow = self.shadow_slot(version)
             if shadow >= 0:
                 self._serve_memo = (query, float(costs[shadow]))
@@ -485,13 +486,21 @@ class InMemoryBackend(_RegistryMixin):
         return shadow[1]
 
     @property
-    def serve_primable(self) -> bool:
+    def _serve_primable(self) -> bool:
         """True when a primed shadow-slot score is a valid serve memo —
         i.e. estimation charges exact metadata scores.  ``numpy`` is exact
         by construction; ``pallas_fused`` is exact because its float32
         kernel only runs when the operands are float32-representable
         (bit-identical comparisons) and falls back to numpy otherwise."""
         return self._compute in ("numpy", "pallas_fused")
+
+    @property
+    def serve_primable(self) -> bool:
+        """Deprecated alias of the internal ``_serve_primable`` flag."""
+        warnings.warn("serve_primable is an internal detail of the "
+                      "priming machinery; it is now _serve_primable",
+                      DeprecationWarning, stacklevel=2)
+        return self._serve_primable
 
     def serve(self, query: wl.Query) -> float:
         if self._compute == "reference":

@@ -2,10 +2,17 @@
 
 A :class:`FleetEngine` drives N independent tenants — each a fully-formed
 :class:`repro.engine.LayoutEngine` with its own policy, backend, α and
-Δ-delay — over a single interleaved stream of ``(tenant_id, query)``
-events, the shape of traffic a warehouse actually sees.  Decisions stay
-strictly per-tenant; what is *shared* is physical reorganization work,
-arbitrated by a pluggable :class:`repro.engine.scheduler.ReorgScheduler`.
+Δ-delay — over a single interleaved stream of typed
+:data:`repro.core.workload.Event` envelopes
+(:class:`~repro.core.workload.QueryEvent` /
+:class:`~repro.core.workload.IngestEvent`), the shape of traffic a
+warehouse actually sees.  :meth:`FleetEngine.submit` enqueues one event
+and :meth:`FleetEngine.drain` processes the backlog; ``run`` /
+``run_batched`` (and the serving tier,
+:class:`repro.serve.ServeFrontend`) are drivers over that one entry
+point.  Decisions stay strictly per-tenant; what is *shared* is physical
+reorganization work, arbitrated by a pluggable
+:class:`repro.engine.scheduler.ReorgScheduler`.
 
 The contract with each tenant's Δ-delay semantics (paper §VI-D5):
 
@@ -212,6 +219,8 @@ class FleetEngine:
         # and maintained incrementally from then on (tenant attach/detach
         # plus per-tenant state events), never rebuilt per tick.
         self._fleet_matrix: Optional[FleetMatrix] = None
+        # Submitted-but-not-yet-processed events (see submit/drain).
+        self._inbox: Deque[wl.Event] = collections.deque()
 
     @property
     def tenant_ids(self) -> List[str]:
@@ -367,40 +376,106 @@ class FleetEngine:
         self._waiting = keep
 
     # ------------------------------------------------------------------
-    # Driving the fleet
+    # Driving the fleet: submit / drain is THE entry point.  ``step``,
+    # ``run`` and ``run_batched`` (and repro.serve.ServeFrontend) are all
+    # drivers over it.
     # ------------------------------------------------------------------
-    def step(self, tenant_id: str, event) -> FleetStepResult:
-        """Advance the fleet by one interleaved event.
+    def submit(self, event) -> None:
+        """Enqueue one :data:`repro.core.workload.Event` for processing.
 
-        ``event`` is a :class:`repro.core.workload.Query` (one tenant
-        step) or a :class:`repro.core.workload.IngestBatch` (rows appended
-        to the tenant's table — visible to its very next query, ticking
-        the fleet clock and the scheduler but not the tenant's own index).
+        Accepts :class:`~repro.core.workload.QueryEvent` /
+        :class:`~repro.core.workload.IngestEvent`; a legacy bare
+        ``(tenant_id, Query | IngestBatch)`` pair is coerced with a
+        :class:`DeprecationWarning`.  Nothing runs until :meth:`drain`.
         """
+        self._inbox.append(wl.as_event(event))
+
+    @property
+    def queue_depth(self) -> int:
+        """Events submitted but not yet drained."""
+        return len(self._inbox)
+
+    def drain(self, *, batched: bool = False, compute: str = "numpy",
+              frames_per_pass: Optional[int] = None,
+              collect: bool = False):
+        """Process every submitted event, in submission order.
+
+        By default each event goes through the exact per-event machinery
+        (tick, pump, decide, charge, Δ-delayed swap, serve) and the number
+        of events processed is returned; ``collect=True`` returns the
+        per-event :class:`FleetStepResult` observations instead.
+
+        ``batched=True`` routes the backlog through the fused
+        :class:`FleetMatrix` pass (see :meth:`run_batched` for the
+        ``compute`` / ``frames_per_pass`` contract); observations are not
+        produced on that path, so it is mutually exclusive with
+        ``collect``.
+        """
+        if batched and collect:
+            raise ValueError("collect=True needs the per-event path; "
+                             "it cannot be combined with batched=True")
+        if batched:
+            events = list(self._inbox)
+            self._inbox.clear()
+            self._drain_batched(events, compute=compute,
+                                frames_per_pass=frames_per_pass)
+            return len(events)
+        if collect:
+            results = []
+            while self._inbox:
+                results.append(self._dispatch(self._inbox.popleft()))
+            return results
+        n = 0
+        while self._inbox:
+            self._dispatch(self._inbox.popleft())
+            n += 1
+        return n
+
+    def _dispatch(self, event: wl.Event) -> FleetStepResult:
+        """Advance the fleet by one typed event (the per-event hot path)."""
+        tenant_id = event.tenant_id
         engine = self._tenants[tenant_id]
         self._tick += 1
         self.scheduler.tick(self._tick)
         self._pump()
-        if isinstance(event, wl.IngestBatch):
-            engine.ingest(event.rows)
+        if isinstance(event, wl.IngestEvent):
+            # Rows appended to the tenant's table — visible to its very
+            # next query, ticking the fleet clock and the scheduler but
+            # not the tenant's own index.
+            engine.ingest(event.batch.rows)
             return FleetStepResult(tick=self._tick, tenant_id=tenant_id,
                                    step=None, swap_deferred=False)
         before = self.deferred_ticks
-        step = engine.step(event)
+        step = engine.step(event.query)
         return FleetStepResult(tick=self._tick, tenant_id=tenant_id,
                                step=step,
                                swap_deferred=self.deferred_ticks > before)
 
-    def run(self, events: Iterable[Tuple[str, wl.Query]],
-            name: Optional[str] = None) -> FleetResult:
-        """Step every ``(tenant_id, event)`` event and return the trace.
+    def step(self, tenant_id: str, event) -> FleetStepResult:
+        """Advance the fleet by one interleaved event (payload form).
 
-        Accepts any iterable of events, including a
-        :class:`repro.core.workload.FleetStream` or a mixed
-        query/ingest :class:`repro.core.workload.IngestStream`.
+        ``event`` is a :class:`repro.core.workload.Query` (one tenant
+        step) or a :class:`repro.core.workload.IngestBatch`; the pair is
+        wrapped into the typed :data:`repro.core.workload.Event` envelope
+        and dispatched immediately, ahead of any submitted backlog.
         """
-        for tenant_id, event in events:
-            self.step(tenant_id, event)
+        if isinstance(event, wl.IngestBatch):
+            return self._dispatch(wl.IngestEvent(tenant_id, event))
+        return self._dispatch(wl.QueryEvent(tenant_id, event))
+
+    def run(self, events: Iterable[wl.Event],
+            name: Optional[str] = None) -> FleetResult:
+        """Submit every event, drain, and return the trace.
+
+        Accepts any iterable of :data:`repro.core.workload.Event`,
+        including a :class:`repro.core.workload.FleetStream` or a mixed
+        query/ingest :class:`repro.core.workload.IngestStream`; legacy
+        bare ``(tenant_id, payload)`` pairs are accepted with a
+        :class:`DeprecationWarning`.
+        """
+        for event in events:
+            self.submit(event)
+        self.drain()
         return self.result(name)
 
     # ------------------------------------------------------------------
@@ -428,7 +503,7 @@ class FleetEngine:
             self._fleet_matrix.set_compute_backend(compute)
         return self._fleet_matrix
 
-    def run_batched(self, events: Iterable[Tuple[str, wl.Query]],
+    def run_batched(self, events: Iterable[wl.Event],
                     name: Optional[str] = None, compute: str = "numpy",
                     frames_per_pass: Optional[int] = None) -> FleetResult:
         """Run the fleet with per-frame fused cost evaluation.
@@ -479,14 +554,21 @@ class FleetEngine:
         thousand when the bulk path is available, since then per-pass
         fixed cost is all that remains.
         """
+        for event in events:
+            self.submit(event)
+        self.drain(batched=True, compute=compute,
+                   frames_per_pass=frames_per_pass)
+        return self.result(name)
+
+    def _drain_batched(self, events: List[wl.Event], compute: str,
+                       frames_per_pass: Optional[int]) -> None:
         fm = self._ensure_fleet_matrix(compute)
         scheduler = self.scheduler
-        events = list(events)
         # Per-tenant hot-loop facts hoisted out of the inner loop; the
         # serve memo is only primable where serve() charges exact metadata
-        # scores (see StorageBackend.serve_primable).
+        # scores (see InMemoryBackend._serve_primable).
         prep = {tid: (e, e.backend,
-                      bool(getattr(e.backend, "serve_primable", False)))
+                      bool(getattr(e.backend, "_serve_primable", False)))
                 for tid, e in self._tenants.items()}
         # Materialize every tenant's initial layout up front (idempotent;
         # a first step would do it anyway) so even the first fused pass
@@ -519,30 +601,30 @@ class FleetEngine:
         dense_hint = True
         i, n = 0, len(events)
         while i < n:
-            if not isinstance(events[i][1], wl.Query):
+            if isinstance(events[i], wl.IngestEvent):
                 # Ingest event: handled inline through the same per-event
-                # machinery as :meth:`step` (tick, scheduler, pump, append)
-                # — never scored by the fused pass, so a stream without
-                # ingest events takes exactly the pre-ingest path.
-                tid, event = events[i]
+                # machinery as :meth:`_dispatch` (tick, scheduler, pump,
+                # append) — never scored by the fused pass, so a stream
+                # without ingest events takes exactly the pre-ingest path.
+                tid, batch = events[i]
                 self._tick += 1
                 scheduler.tick(self._tick)
                 if self._waiting:
                     self._pump()
-                prep[tid][0].ingest(event.rows)
+                prep[tid][0].ingest(batch.rows)
                 i += 1
                 continue
-            frames: List[List[Tuple[str, wl.Query]]] = []
+            frames: List[List[wl.QueryEvent]] = []
             while len(frames) < frames_per_pass and i < n:
                 j = i
                 seen = set()
-                while (j < n and isinstance(events[j][1], wl.Query)
+                while (j < n and isinstance(events[j], wl.QueryEvent)
                        and events[j][0] not in seen):
                     seen.add(events[j][0])
                     j += 1
                 frames.append(events[i:j])
                 i = j
-                if j < n and not isinstance(events[j][1], wl.Query):
+                if j < n and isinstance(events[j], wl.IngestEvent):
                     break
             # A regular pass headed for the bulk path never reads the
             # per-event prime tuples — score dense-only and, in the rare
@@ -591,7 +673,6 @@ class FleetEngine:
                     if self._waiting:
                         self._pump()
                     engine.step_fast(q)
-        return self.result(name)
 
     def _bulk_pass(self, frames, primed, prep) -> bool:
         """Commit one scored pass without per-event Python, if legal.

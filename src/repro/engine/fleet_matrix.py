@@ -18,7 +18,7 @@ tick**:
   a StateMatrix slot);
 * per-tenant state add/evict events stream in through a listener installed
   on each attached :class:`StateMatrix`
-  (:meth:`StateMatrix.add_listener`), replaying the same append /
+  (``StateMatrix._add_listener``), replaying the same append /
   swap-with-last slot algorithm, so fleet slots provably coincide with
   each tenant's local slots;
 * capacity growth (more tenants, more states, wider partitions) is
@@ -225,7 +225,7 @@ class FleetMatrix:
             self._register(tenant_id, sid, matrix.metadata(sid))
         mirror = _TenantMirror(self, tenant_id)
         self._mirrors[tenant_id] = mirror
-        matrix.add_listener(mirror)
+        matrix._add_listener(mirror)
         self.version += 1
 
     def detach(self, tenant_id: str) -> None:
@@ -234,7 +234,7 @@ class FleetMatrix:
         row = self._trows.pop(tenant_id, None)
         if row is None:
             return
-        self._sms.pop(tenant_id).remove_listener(
+        self._sms.pop(tenant_id)._remove_listener(
             self._mirrors.pop(tenant_id))
         self._ids.pop(tenant_id)
         self._slots.pop(tenant_id)

@@ -28,6 +28,7 @@ for the exactness caveat).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -70,11 +71,25 @@ class StateMatrix:
         #: the same swap-with-last algorithm assigns identical slots.
         self._listeners: List = []
 
-    def add_listener(self, listener) -> None:
+    def _add_listener(self, listener) -> None:
         self._listeners.append(listener)
 
-    def remove_listener(self, listener) -> None:
+    def _remove_listener(self, listener) -> None:
         self._listeners.remove(listener)
+
+    def add_listener(self, listener) -> None:
+        """Deprecated alias of the internal ``_add_listener`` hook."""
+        warnings.warn("StateMatrix listener plumbing is internal mirror "
+                      "machinery; add_listener is now _add_listener",
+                      DeprecationWarning, stacklevel=2)
+        self._add_listener(listener)
+
+    def remove_listener(self, listener) -> None:
+        """Deprecated alias of the internal ``_remove_listener`` hook."""
+        warnings.warn("StateMatrix listener plumbing is internal mirror "
+                      "machinery; remove_listener is now _remove_listener",
+                      DeprecationWarning, stacklevel=2)
+        self._remove_listener(listener)
 
     # -- introspection --------------------------------------------------
     def __len__(self) -> int:

@@ -1,7 +1,32 @@
-"""Serving substrate: prefill/decode steps, greedy generation, batching."""
-from repro.serve import batching, serve_loop
+"""Serving plane: the traffic-facing tier in front of the fleet.
+
+Public surface:
+
+* :class:`ServeFrontend` — admission-controlled, load-leveled frontend
+  over a :class:`repro.engine.FleetEngine`; sheds reorg work (never
+  serve work) under overload and serves through a plane-versioned
+  read-through cache.
+* :class:`FrontendConfig` / :class:`AdmissionResult` — its knobs and
+  per-submit outcome.
+* :class:`TokenBucket` / :class:`CircuitBreaker` — deterministic
+  admission primitives (event-counter clocked).
+* :class:`VersionedResultCache` / :func:`cache_key` — the serve-cost
+  cache keyed on StateMatrix plane versions.
+* :class:`Request` / :class:`SlotBatcher`, :func:`build_serve_fns` /
+  :func:`greedy_generate` — the LLM-decode substrate (fixed-slot
+  continuous batching; unrelated to the fleet frontend).
+"""
+from repro.serve import admission, batching, cache, frontend, serve_loop
+from repro.serve.admission import CircuitBreaker, TokenBucket
 from repro.serve.batching import Request, SlotBatcher
+from repro.serve.cache import VersionedResultCache, cache_key
+from repro.serve.frontend import (AdmissionResult, FrontendConfig,
+                                  ServeFrontend)
 from repro.serve.serve_loop import build_serve_fns, greedy_generate
 
-__all__ = ["Request", "SlotBatcher", "build_serve_fns", "greedy_generate",
-           "batching", "serve_loop"]
+__all__ = [
+    "AdmissionResult", "CircuitBreaker", "FrontendConfig", "Request",
+    "ServeFrontend", "SlotBatcher", "TokenBucket", "VersionedResultCache",
+    "build_serve_fns", "cache_key", "greedy_generate",
+    "admission", "batching", "cache", "frontend", "serve_loop",
+]

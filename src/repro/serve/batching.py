@@ -8,8 +8,9 @@ request churn.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -32,7 +33,9 @@ class SlotBatcher:
     def __init__(self, num_slots: int):
         self.num_slots = num_slots
         self.slots: List[Optional[Request]] = [None] * num_slots
-        self.queue: List[Request] = []
+        # A deque, not a list: fill_slots pops from the front every decode
+        # step, and list.pop(0) is O(queue) per request.
+        self.queue: Deque[Request] = collections.deque()
         self.completed: List[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -43,7 +46,7 @@ class SlotBatcher:
         filled = []
         for i in range(self.num_slots):
             if self.slots[i] is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
+                self.slots[i] = self.queue.popleft()
                 filled.append(i)
         return filled
 

@@ -1,0 +1,229 @@
+"""Tests for the unified typed event surface (satellites of the serving
+front end PR): the ``QueryEvent | IngestEvent`` union, the deprecated
+bare-tuple shim, the ``FleetEngine.submit``/``drain`` entry point that
+``run``/``run_batched`` route through, and the curated public API
+(including the underscore demotions' re-export shims)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (OreoConfig, build_default_layout, make_generator,
+                        workload as wl)
+from repro.core import layout_manager as lm
+from repro.core.workload import (IngestBatch, IngestEvent, QueryEvent,
+                                 as_event, make_drift_scenario,
+                                 make_ingest_scenario)
+from repro.engine import (FleetEngine, FleetStepResult, InMemoryBackend,
+                          LayoutEngine, OreoPolicy, StateMatrix)
+
+
+@pytest.fixture(scope="module")
+def tenant_data():
+    return {f"t{t}": np.random.default_rng(700 + t).uniform(
+        0, 100, size=(2_000, 5)) for t in range(2)}
+
+
+@pytest.fixture(scope="module")
+def bounds(tenant_data):
+    lo = np.min([d.min(0) for d in tenant_data.values()], axis=0)
+    hi = np.max([d.max(0) for d in tenant_data.values()], axis=0)
+    return lo, hi
+
+
+def oreo_engine(data, alpha=10.0, delta=5, seed=2):
+    cfg = OreoConfig(alpha=alpha, seed=seed, delta=delta,
+                     manager=lm.LayoutManagerConfig(target_partitions=8,
+                                                    window_size=60,
+                                                    gen_every=30))
+    policy = OreoPolicy(data, build_default_layout(0, data, 8),
+                        make_generator("qdtree"), cfg)
+    return LayoutEngine(policy, InMemoryBackend(data), delta=cfg.delta)
+
+
+def some_query(c=5, seed=0):
+    rng = np.random.default_rng(seed)
+    lo = np.full(c, -np.inf)
+    hi = np.full(c, np.inf)
+    lo[0], hi[0] = np.sort(rng.uniform(0, 100, size=2))
+    return wl.Query(lo=lo, hi=hi)
+
+
+# ---------------------------------------------------------------------------
+# The Event union and its tuple compatibility
+# ---------------------------------------------------------------------------
+
+def test_typed_events_are_tuple_compatible():
+    q = some_query()
+    batch = IngestBatch(rows=np.zeros((3, 5)))
+    qe = QueryEvent("a", q)
+    ie = IngestEvent("b", batch)
+    # NamedTuples ARE the legacy pairs: unpack, index, compare
+    tid, payload = qe
+    assert (tid, payload) == ("a", q) and qe[1] is q
+    assert isinstance(qe, tuple) and isinstance(ie, tuple)
+    assert ie == ("b", batch)
+    assert qe.tenant_id == "a" and qe.query is q
+    assert ie.tenant_id == "b" and ie.batch is batch
+
+
+def test_as_event_passes_typed_through_without_warning():
+    qe = QueryEvent("a", some_query())
+    ie = IngestEvent("a", IngestBatch(rows=np.zeros((2, 5))))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert as_event(qe) is qe
+        assert as_event(ie) is ie
+
+
+def test_as_event_tuple_shim_warns_deprecation():
+    q = some_query()
+    with pytest.warns(DeprecationWarning, match="QueryEvent"):
+        ev = as_event(("a", q))
+    assert ev == QueryEvent("a", q) and type(ev) is QueryEvent
+    batch = IngestBatch(rows=np.zeros((2, 5)))
+    with pytest.warns(DeprecationWarning, match="IngestEvent"):
+        ev = as_event(["b", batch])
+    assert ev == IngestEvent("b", batch) and type(ev) is IngestEvent
+
+
+def test_as_event_rejects_non_events():
+    with pytest.raises(TypeError, match="not a fleet event"):
+        as_event(("a", "not-a-query"))
+    with pytest.raises(TypeError, match="not a fleet event"):
+        as_event(42)
+
+
+def test_streams_emit_typed_events(bounds):
+    lo, hi = bounds
+    fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=2,
+                             queries_per_tenant=20, seed=3)
+    assert all(type(ev) is QueryEvent for ev in fs)
+    ms = make_ingest_scenario("mixed_rw", lo, hi, num_tenants=2,
+                              queries_per_tenant=20, seed=3)
+    kinds = {type(ev) for ev in ms}
+    assert kinds == {QueryEvent, IngestEvent}
+
+
+# ---------------------------------------------------------------------------
+# submit / drain: the single entry point
+# ---------------------------------------------------------------------------
+
+def test_submit_drain_matches_run(tenant_data, bounds):
+    lo, hi = bounds
+    fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=2,
+                             queries_per_tenant=60, seed=5)
+    ref = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                       for tid in fs.tenant_ids}).run(fs)
+    fleet = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                         for tid in fs.tenant_ids})
+    for ev in fs:
+        fleet.submit(ev)
+    assert fleet.queue_depth == len(fs.events)
+    assert fleet.drain() == len(fs.events)
+    assert fleet.queue_depth == 0
+    got = fleet.result()
+    for tid in fs.tenant_ids:
+        a, b = ref.per_tenant[tid], got.per_tenant[tid]
+        assert np.array_equal(a.query_costs, b.query_costs)
+        assert a.reorg_indices == b.reorg_indices
+        assert np.array_equal(a.state_seq, b.state_seq)
+
+
+def test_drain_collect_returns_step_results(tenant_data):
+    from repro.engine import IngestConfig
+    d = tenant_data["t0"]
+    fleet = FleetEngine({"a": LayoutEngine(
+        OreoPolicy(d, build_default_layout(0, d, 8),
+                   make_generator("qdtree"),
+                   OreoConfig(alpha=10.0, seed=2, delta=5)),
+        InMemoryBackend(d), delta=5, ingest=IngestConfig())})
+    q = some_query()
+    fleet.submit(QueryEvent("a", q))
+    fleet.submit(IngestEvent("a", IngestBatch(rows=d[:4].copy())))
+    out = fleet.drain(collect=True)
+    assert [type(r) for r in out] == [FleetStepResult, FleetStepResult]
+    assert out[0].step is not None and out[0].step.query is q
+    assert out[1].step is None          # ingest events have no observation
+    assert out[1].tick == 2
+
+
+def test_drain_batched_rejects_collect(tenant_data):
+    fleet = FleetEngine({"a": oreo_engine(tenant_data["t0"])})
+    with pytest.raises(ValueError, match="collect"):
+        fleet.drain(batched=True, collect=True)
+
+
+def test_drain_batched_empty_still_validates_backends(tenant_data):
+    # run_batched([]) semantics survive the drain refactor: the plane is
+    # built (and backend eligibility checked) even with nothing queued.
+    fleet = FleetEngine({"a": oreo_engine(tenant_data["t0"])})
+    assert fleet.drain(batched=True) == 0
+    assert fleet.fleet_matrix is not None
+
+
+def test_run_accepts_legacy_tuples_with_warning(tenant_data, bounds):
+    lo, hi = bounds
+    fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=2,
+                             queries_per_tenant=40, seed=5)
+    typed = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                         for tid in fs.tenant_ids}).run(fs)
+    legacy_events = [(tid, q) for tid, q in fs]      # bare pairs
+    fleet = FleetEngine({tid: oreo_engine(tenant_data[tid])
+                         for tid in fs.tenant_ids})
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        got = fleet.run(legacy_events)
+    for tid in fs.tenant_ids:
+        a, b = typed.per_tenant[tid], got.per_tenant[tid]
+        assert np.array_equal(a.query_costs, b.query_costs)
+        assert a.reorg_indices == b.reorg_indices
+
+
+# ---------------------------------------------------------------------------
+# Curated public API + demotion shims
+# ---------------------------------------------------------------------------
+
+def test_engine_exports_event_surface():
+    import repro.engine as eng
+    for name in ("Event", "QueryEvent", "IngestEvent", "as_event",
+                 "FleetEngine", "LayoutEngine"):
+        assert name in eng.__all__
+        assert getattr(eng, name) is not None
+    assert eng.QueryEvent is QueryEvent
+
+
+def test_serve_exports_frontend_surface():
+    import repro.serve as serve
+    for name in ("ServeFrontend", "FrontendConfig", "AdmissionResult",
+                 "TokenBucket", "CircuitBreaker", "VersionedResultCache",
+                 "cache_key", "SlotBatcher"):
+        assert name in serve.__all__
+        assert getattr(serve, name) is not None
+
+
+def test_serve_primable_demoted_with_warning_shim():
+    data = np.random.default_rng(0).uniform(0, 100, size=(100, 3))
+    backend = InMemoryBackend(data)
+    assert backend._serve_primable is True
+    with pytest.warns(DeprecationWarning, match="_serve_primable"):
+        assert backend.serve_primable is True
+
+
+def test_state_matrix_listeners_demoted_with_warning_shim():
+    sm = StateMatrix()
+
+    class Listener:
+        def on_register(self, state_id, meta):
+            pass
+
+        def on_deregister(self, state_id):
+            pass
+
+    lst = Listener()
+    with pytest.warns(DeprecationWarning, match="_add_listener"):
+        sm.add_listener(lst)
+    with pytest.warns(DeprecationWarning, match="_remove_listener"):
+        sm.remove_listener(lst)
+    sm._add_listener(lst)               # the internal names, silently
+    sm._remove_listener(lst)
+    assert sm._listeners == []

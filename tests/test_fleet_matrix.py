@@ -446,7 +446,7 @@ def test_run_batched_identical_for_non_estimating_policies(tenant_data):
         hi = np.full(6, np.inf)
         col = i % 6
         lo[col], hi[col] = np.sort(rng.uniform(0, 100, size=2))
-        events.append(("a", wl.Query(lo=lo, hi=hi)))
+        events.append(wl.QueryEvent("a", wl.Query(lo=lo, hi=hi)))
     for frames_per_pass in (1, 8, 64):
         loop = FleetEngine({"a": flipflop_engine(d, period=5, delta=2)})
         r_loop = loop.run(events)
@@ -462,9 +462,9 @@ def test_run_batched_rejects_unknown_compute_on_reuse(tenant_data):
     d = tenant_data["t0"]
     fleet = FleetEngine({"a": flipflop_engine(d)})
     q = full_scan(6)
-    fleet.run_batched([("a", q)])
+    fleet.run_batched([wl.QueryEvent("a", q)])
     with pytest.raises(ValueError, match="compute"):
-        fleet.run_batched([("a", q)], compute="Pallas")
+        fleet.run_batched([wl.QueryEvent("a", q)], compute="Pallas")
 
 
 def test_add_and_remove_tenant_mid_flight(tenant_data):
@@ -507,7 +507,7 @@ def test_add_tenant_attaches_to_existing_fleet_matrix(tenant_data):
     d = tenant_data["t0"]
     fleet = FleetEngine({"a": flipflop_engine(d)})
     q = full_scan(6)
-    fleet.run_batched([("a", q)])
+    fleet.run_batched([wl.QueryEvent("a", q)])
     assert "a" in fleet.fleet_matrix
     fleet.add_tenant("b", flipflop_engine(d))
     assert "b" in fleet.fleet_matrix
@@ -624,7 +624,7 @@ def test_bulk_path_runs_megakernel_on_f32_exact_data(monkeypatch):
             a, b = np.sort(rng.uniform(0, 100, size=2).astype(
                 np.float32).astype(np.float64))
             lo[col], hi[col] = a, b
-            events.append((tid, wl.Query(lo=lo, hi=hi)))
+            events.append(wl.QueryEvent(tid, wl.Query(lo=lo, hi=hi)))
     loop = FleetEngine({tid: threshold_engine(d, 0.05) for tid, d
                         in data.items()})
     r_loop = loop.run(events)

@@ -343,8 +343,9 @@ def test_kconcurrent_holds_unit_for_whole_migration(tenant_data):
     lo, hi = d.min(0), d.max(0)
     fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=2,
                              queries_per_tenant=150, seed=9)
-    events = [(tid, q) for tid, q in fs if tid in ("t0", "t1")]
-    renamed = [("a" if tid == "t0" else "b", q) for tid, q in events]
+    events = [ev for ev in fs if ev.tenant_id in ("t0", "t1")]
+    renamed = [wl.QueryEvent("a" if tid == "t0" else "b", q)
+               for tid, q in events]
     fleet.run(renamed)
     # while any migration was in flight the single unit was held: at no
     # point did both tenants migrate concurrently
