@@ -9,7 +9,8 @@ BENCH_DIR ?= .bench
         bench-fleet-smoke bench-fleet-gate bench-reorg-smoke \
         bench-reorg-gate bench-ingest-smoke bench-ingest-gate \
         bench-kernels-smoke bench-kernels-gate bench-serving-smoke \
-        bench-serving-gate quickstart install
+        bench-serving-gate bench-router-smoke bench-router-gate \
+        quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -40,6 +41,7 @@ bench-full:
 	$(PYTHON) benchmarks/bench_ingest.py --out $(BENCH_DIR)/BENCH_ingest.json
 	$(PYTHON) benchmarks/bench_kernels.py --out $(BENCH_DIR)/BENCH_kernels.json
 	$(PYTHON) benchmarks/bench_serving.py --out $(BENCH_DIR)/BENCH_serving.json
+	$(PYTHON) benchmarks/bench_router.py --out $(BENCH_DIR)/BENCH_router.json
 
 bench-smoke:
 	mkdir -p $(BENCH_DIR)
@@ -82,6 +84,13 @@ bench-serving-smoke:
 
 bench-serving-gate: bench-serving-smoke
 	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_serving_smoke.json --baseline BENCH_serving.json
+
+bench-router-smoke:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_router.py --smoke --out $(BENCH_DIR)/bench_router_smoke.json
+
+bench-router-gate: bench-router-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_router_smoke.json --baseline BENCH_router.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -30,7 +30,12 @@ benchmark families:
   creep in the serving tier drags it down), and its p99/p50 latency
   tail amplification (section ``latency_tail``, **ceiling-gated**: a
   stall on a fraction of events inflates the tail while barely moving
-  the QPS ratio).
+  the QPS ratio);
+* ``bench_router.py --smoke`` vs ``BENCH_router.json`` — the sharded
+  router's critical-path throughput (total events over the slowest
+  shard's individually-timed drain) at N shards divided by the 1-shard
+  router (section ``router_scaling``; routing overhead creep or a
+  placement bug collapsing tenants onto one shard drags it down).
 
 Raw queries/sec are not comparable across machines, so the gate checks
 **ratios**, both sides measured in the same process on the same runner:
@@ -68,14 +73,15 @@ import sys
 SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop",
             "cost_ratio_atomic_over_incremental",
             "cost_ratio_vs_debt_aware", "fused_vs_separate",
-            "serving_qps_ratio")
+            "serving_qps_ratio", "router_scaling")
 #: Ceiling-gated sections: smaller is better (latency tails), the gate
 #: fails when a ratio rises above (1 + tolerance) * baseline.
 CEILING_SECTIONS = ("latency_tail",)
 #: Dedicated smoke-baseline sections a checked-in file may carry; their
 #: grids win over the top-level (full-sweep) numbers for shared keys.
 SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke", "reorg_smoke",
-                  "ingest_smoke", "kernels_smoke", "serving_smoke")
+                  "ingest_smoke", "kernels_smoke", "serving_smoke",
+                  "router_smoke")
 
 
 def load_grids(payload: dict, sections, prefer_smoke: bool) -> dict:

@@ -25,17 +25,29 @@ GeneratorFn = Callable[[int, np.ndarray, Sequence[wl.Query], int],
                        layouts.Layout]
 
 
-def make_generator(technique: str, seed: int = 0) -> GeneratorFn:
-    if technique == "qdtree":
-        def gen(layout_id, data, queries, k):
+class LayoutGenerator:
+    """Picklable :data:`GeneratorFn` for a named technique.
+
+    A plain class rather than a closure so policies holding a generator
+    (and therefore whole engines) survive pickling — live tenant
+    migration across shard processes ships the engine object.
+    """
+
+    def __init__(self, technique: str, seed: int = 0):
+        if technique not in ("qdtree", "zorder"):
+            raise ValueError(f"unknown technique: {technique}")
+        self.technique = technique
+        self.seed = seed
+
+    def __call__(self, layout_id, data, queries, k):
+        if self.technique == "qdtree":
             return qdtree.build_qdtree_layout(layout_id, data, queries, k,
-                                              seed=seed + layout_id)
-        return gen
-    if technique == "zorder":
-        def gen(layout_id, data, queries, k):
-            return zorder.build_zorder_layout(layout_id, data, queries, k)
-        return gen
-    raise ValueError(f"unknown technique: {technique}")
+                                              seed=self.seed + layout_id)
+        return zorder.build_zorder_layout(layout_id, data, queries, k)
+
+
+def make_generator(technique: str, seed: int = 0) -> GeneratorFn:
+    return LayoutGenerator(technique, seed=seed)
 
 
 @dataclasses.dataclass

@@ -13,23 +13,31 @@ from typing import Dict
 from . import mts
 
 
-def gamma_biased_transition(gamma: float) -> mts.TransitionFn:
-    """Builds P(s) ∝ w_s^gamma over the active states.
+class GammaBiasedTransition:
+    """P(s) ∝ w_s^gamma over the active states; picklable callable.
 
     The DynamicUMTS passes ``weights[s] = 1 - last_phase_cost(s)/alpha``
     (average fraction skipped proxy); states unseen last phase get weight 1
     (optimistic -- new states are worth exploring, matching the paper's
-    median/replay initialization spirit).
+    median/replay initialization spirit).  A class rather than a closure
+    so policies holding it — and whole engines — survive pickling for
+    cross-process tenant migration.
     """
 
-    def fn(weights: Dict[int, float]) -> Dict[int, float]:
-        if gamma == 0.0 or not weights:
+    def __init__(self, gamma: float):
+        self.gamma = gamma
+
+    def __call__(self, weights: Dict[int, float]) -> Dict[int, float]:
+        if self.gamma == 0.0 or not weights:
             return mts.uniform_transition(weights)
-        powered = {s: max(w, 1e-6) ** gamma for s, w in weights.items()}
+        powered = {s: max(w, 1e-6) ** self.gamma
+                   for s, w in weights.items()}
         total = sum(powered.values())
         return {s: v / total for s, v in powered.items()}
 
-    return fn
+
+def gamma_biased_transition(gamma: float) -> mts.TransitionFn:
+    return GammaBiasedTransition(gamma)
 
 
 def median_initialized_counter(existing_phase_costs: Dict[int, float]) -> float:

@@ -74,6 +74,48 @@ def _best_cut(sample: np.ndarray, node: _Node, q_lo: np.ndarray,
     return best_gain, best_col, best_v
 
 
+class _TreeRouter:
+    """Vectorized tree routing over the packed node arrays.
+
+    A class (not a closure) so layouts — and the engines holding them —
+    stay picklable for cross-process tenant migration.
+    """
+
+    def __init__(self, cols, thresholds, lefts, rights, leaf_ids):
+        self.cols = cols
+        self.thresholds = thresholds
+        self.lefts = lefts
+        self.rights = rights
+        self.leaf_ids = leaf_ids
+
+    def __call__(self, rows: np.ndarray) -> np.ndarray:
+        idx = np.zeros(len(rows), dtype=np.int64)
+        active = self.cols[idx] >= 0
+        while active.any():
+            cur = idx[active]
+            go_left = rows[active, self.cols[cur]] <= self.thresholds[cur]
+            idx[active] = np.where(go_left, self.lefts[cur],
+                                   self.rights[cur])
+            active = self.cols[idx] >= 0
+        return self.leaf_ids[idx]
+
+
+class _DefaultRouter:
+    """Arrival-order (or sort-column quantile) routing; picklable."""
+
+    def __init__(self, k: int, sort_col, boundaries):
+        self.k = k
+        self.sort_col = sort_col
+        self.boundaries = boundaries
+
+    def __call__(self, rows: np.ndarray) -> np.ndarray:
+        if self.sort_col is None:
+            n2 = len(rows)
+            return np.minimum((np.arange(n2) * self.k) // n2, self.k - 1)
+        return np.searchsorted(self.boundaries, rows[:, self.sort_col],
+                               side="right")
+
+
 def build_qdtree_layout(layout_id: int,
                         data: np.ndarray,
                         queries: Sequence[wl.Query],
@@ -157,16 +199,7 @@ def build_qdtree_layout(layout_id: int,
     rights = np.array([nd.right for nd in nodes], dtype=np.int64)
     leaf_ids = np.array([nd.leaf_id for nd in nodes], dtype=np.int64)
 
-    def route(rows: np.ndarray) -> np.ndarray:
-        idx = np.zeros(len(rows), dtype=np.int64)
-        active = cols[idx] >= 0
-        while active.any():
-            cur = idx[active]
-            go_left = rows[active, cols[cur]] <= thresholds[cur]
-            idx[active] = np.where(go_left, lefts[cur], rights[cur])
-            active = cols[idx] >= 0
-        return leaf_ids[idx]
-
+    route = _TreeRouter(cols, thresholds, lefts, rights, leaf_ids)
     sample_assignment = route(sample)
     meta = layouts.metadata_from_assignment(sample, sample_assignment,
                                             leaf_count, row_scale=n / m)
@@ -194,16 +227,14 @@ def build_default_layout(layout_id: int, data: np.ndarray, k: int,
     assignment[order] = np.minimum((np.arange(n) * k) // n, k - 1)
     meta = layouts.metadata_from_assignment(data, assignment, k)
 
-    def route(rows: np.ndarray) -> np.ndarray:
-        # Arrival-order layout: contiguous chunks in row order (matches the
-        # metadata built above); with a sort col, route by value against the
-        # learned boundaries.
-        if sort_col is None:
-            n2 = len(rows)
-            return np.minimum((np.arange(n2) * k) // n2, k - 1)
+    # Arrival-order layout: contiguous chunks in row order (matches the
+    # metadata built above); with a sort col, route by value against the
+    # learned quantile boundaries.
+    if sort_col is None:
+        boundaries = None
+    else:
         vals = data[order, sort_col]
         boundaries = vals[np.minimum((np.arange(1, k) * n) // k, n - 1)]
-        return np.searchsorted(boundaries, rows[:, sort_col], side="right")
-
+    route = _DefaultRouter(k, sort_col, boundaries)
     return layouts.Layout(layout_id=layout_id, name=f"default#{layout_id}",
                           technique="default", meta=meta, route=route)

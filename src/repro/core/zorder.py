@@ -41,6 +41,26 @@ def interleave_bits(codes: np.ndarray) -> np.ndarray:
     return keys
 
 
+class _ZOrderRouter:
+    """Z-key quantile routing; a class (not a closure) so layouts — and
+    the engines holding them — stay picklable for cross-process tenant
+    migration."""
+
+    def __init__(self, zcols, col_lo, col_hi, boundaries, k: int):
+        self.zcols = zcols
+        self.col_lo = col_lo
+        self.col_hi = col_hi
+        self.boundaries = boundaries
+        self.k = k
+
+    def __call__(self, rows: np.ndarray) -> np.ndarray:
+        keys_r = interleave_bits(
+            quantize_columns(rows[:, self.zcols], self.col_lo, self.col_hi))
+        return np.minimum(
+            np.searchsorted(self.boundaries, keys_r, side="right"),
+            self.k - 1)
+
+
 def build_zorder_layout(layout_id: int,
                         data: np.ndarray,
                         queries: Sequence[wl.Query],
@@ -76,12 +96,7 @@ def build_zorder_layout(layout_id: int,
     # Key-quantile boundaries let `route` assign any row consistently.
     boundaries = keys[order][np.minimum((np.arange(1, k) * m) // k, m - 1)]
 
-    def route(rows: np.ndarray) -> np.ndarray:
-        keys_r = interleave_bits(
-            quantize_columns(rows[:, zcols], col_lo, col_hi))
-        return np.minimum(np.searchsorted(boundaries, keys_r, side="right"),
-                          k - 1)
-
+    route = _ZOrderRouter(zcols, col_lo, col_hi, boundaries, k)
     meta = layouts.metadata_from_assignment(sample, route(sample), k,
                                             row_scale=n / m)
     return layouts.Layout(

@@ -33,10 +33,21 @@ Layers:
   ``(tenant_id, payload)`` tuples still coerce, with a
   :class:`DeprecationWarning`).  Physical reorganization is arbitrated
   by a :class:`ReorgScheduler` (:class:`UnlimitedScheduler` /
-  :class:`KConcurrentScheduler` / :class:`TokenBucketScheduler`), with
+  :class:`KConcurrentScheduler` / :class:`TokenBucketScheduler`;
+  declaratively via :class:`SchedulerSpec`), with
   drift scenarios in :data:`repro.core.workload.DRIFT_SCENARIOS`.  The
   traffic-facing tier above this — admission control, load shedding,
   versioned caching — lives in :mod:`repro.serve`.
+* :class:`FleetRouter` — the sharded fleet-of-fleets
+  (:mod:`repro.engine.router`): N fleet shards behind a
+  consistent-hash :class:`PartitionDirectory`
+  (:mod:`repro.engine.placement`), with live tenant migration that
+  carries α charge ledgers bitwise and hysteresis-gated load-skew
+  rebalancing.  Both :class:`FleetEngine` and :class:`FleetRouter`
+  satisfy the :class:`EventSink` protocol — submit / drain / stats —
+  so :class:`repro.serve.ServeFrontend` (and any other driver) sits
+  over a single fleet or a routed shard set unchanged; process-
+  parallel shard execution lives in :mod:`repro.launch.shard_host`.
 * :mod:`repro.engine.reorg` — the incremental reorganization plane:
   ``LayoutEngine(..., incremental=True)`` turns each charged
   reorganization into a planned sequence of micro-moves
@@ -65,6 +76,8 @@ Layers:
   (:func:`repro.engine.compute.fleet_scan_matrix`: ``numpy`` exact /
   ``pallas`` kernel) with traces bit-identical to the stepwise loop.
 """
+from typing import Protocol, runtime_checkable
+
 from repro.core.workload import Event, IngestEvent, QueryEvent, as_event
 from repro.engine.backends import DiskBackend, InMemoryBackend, StorageBackend
 from repro.engine.compute import fleet_scan_matrix, scan_matrix
@@ -72,27 +85,70 @@ from repro.engine.core import LayoutEngine, StepResult
 from repro.engine.fleet import FleetEngine, FleetResult, FleetStepResult
 from repro.engine.fleet_matrix import FleetMatrix
 from repro.engine.ingest import DebtMeter, DeltaBatch, DeltaLog, IngestConfig
+from repro.engine.placement import (HashRing, PartitionDirectory,
+                                    RebalanceConfig, ShardLoadMeter)
 from repro.engine.policies import (BatchablePolicy, Decision, GreedyPolicy,
                                    MTSOptimalPolicy, OfflineOptimalPolicy,
                                    OreoPolicy, Policy, RegretPolicy,
                                    StaticPolicy, ThresholdSwitchPolicy)
 from repro.engine.reorg import (MicroMove, MigrationPlan, MigrationRecord,
                                 ReorgExecutor, plan_migration)
+from repro.engine.router import FleetRouter
 from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
-                                    TokenBucketScheduler, UnlimitedScheduler)
+                                    SchedulerSpec, TokenBucketScheduler,
+                                    UnlimitedScheduler, as_scheduler_spec)
 from repro.engine.state_matrix import StateMatrix
+
+
+@runtime_checkable
+class EventSink(Protocol):
+    """Anything that accepts typed events and processes them on demand.
+
+    The contract the serving tier programs against, implemented by
+    :class:`FleetEngine` (one fleet) and :class:`FleetRouter` (a routed
+    shard set); the core surface is ``submit(event)`` → queue, ``drain``
+    → process, ``stats()`` → counters.  The rest of the surface a
+    driver can rely on: ``queue_depth``, ``result(name)`` for the
+    merged :class:`FleetResult`, ``tenant(tenant_id)`` for the backing
+    :class:`LayoutEngine`, and ``shard_fleets()`` — the concrete fleets
+    behind the sink (a fleet returns ``[self]``), which is how
+    :class:`repro.serve.ServeFrontend` reaches every shard's scheduler
+    to shed reorg work under overload.
+    """
+
+    def submit(self, event) -> None: ...
+
+    def drain(self, *, batched: bool = ..., compute: str = ...,
+              frames_per_pass=..., collect: bool = ...): ...
+
+    def stats(self) -> dict: ...
+
+    @property
+    def queue_depth(self) -> int: ...
+
+    def result(self, name=None) -> FleetResult: ...
+
+    def tenant(self, tenant_id: str) -> LayoutEngine: ...
+
+    def shard_fleets(self): ...
+
 
 __all__ = [
     "BatchablePolicy",
     "DebtMeter", "Decision", "DeltaBatch", "DeltaLog", "DiskBackend",
-    "Event", "FleetEngine", "FleetMatrix", "FleetResult",
-    "FleetStepResult", "GreedyPolicy", "InMemoryBackend", "IngestConfig",
+    "Event", "EventSink", "FleetEngine", "FleetMatrix", "FleetResult",
+    "FleetRouter",
+    "FleetStepResult", "GreedyPolicy", "HashRing", "InMemoryBackend",
+    "IngestConfig",
     "IngestEvent", "KConcurrentScheduler", "LayoutEngine",
     "MTSOptimalPolicy", "MicroMove",
     "MigrationPlan", "MigrationRecord", "OfflineOptimalPolicy", "OreoPolicy",
-    "Policy", "QueryEvent", "RegretPolicy", "ReorgExecutor",
-    "ReorgScheduler",
+    "PartitionDirectory",
+    "Policy", "QueryEvent", "RebalanceConfig", "RegretPolicy",
+    "ReorgExecutor",
+    "ReorgScheduler", "SchedulerSpec", "ShardLoadMeter",
     "StateMatrix", "StaticPolicy", "StepResult", "StorageBackend",
     "ThresholdSwitchPolicy", "TokenBucketScheduler", "UnlimitedScheduler",
-    "as_event", "fleet_scan_matrix", "plan_migration", "scan_matrix",
+    "as_event", "as_scheduler_spec", "fleet_scan_matrix", "plan_migration",
+    "scan_matrix",
 ]

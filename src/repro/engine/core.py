@@ -306,6 +306,31 @@ class LayoutEngine:
         """Charged-but-not-yet-applied swaps as (due_index, state_id)."""
         return tuple(self._pending_swaps)
 
+    def finish_migration(self) -> None:
+        """Drive any in-flight incremental migration to completion now.
+
+        The finish half of the fleet's finish-or-transplant detach
+        (:meth:`repro.engine.FleetEngine.remove_tenant`): the remaining
+        micro-moves land at the *current* index under an unmetered
+        budget, so the migration's charge ledger closes bitwise on α
+        right here instead of travelling with the engine.  No-op when
+        idle or atomic.
+        """
+        executor = self.reorg_executor
+        if executor is None or executor.active is None:
+            return
+        saved_governor = self.governor
+        saved_cap = executor.rows_per_tick
+        self.governor = None            # no grant_rows metering
+        executor.rows_per_tick = None
+        try:
+            executor.advance(self, self._index)
+        finally:
+            self.governor = saved_governor
+            executor.rows_per_tick = saved_cap
+        assert executor.active is None, \
+            "unbounded advance must complete the migration"
+
     def _step_core(self, query: wl.Query):
         """The decide/charge/swap/serve sequence shared by :meth:`step`
         and :meth:`step_fast` — one implementation so the two entry points

@@ -43,7 +43,8 @@ from repro.core import workload as wl
 
 from .core import LayoutEngine, StepResult
 from .fleet_matrix import FleetMatrix
-from .scheduler import ReorgScheduler, UnlimitedScheduler
+from .scheduler import (ReorgScheduler, SchedulerSpec, UnlimitedScheduler,
+                        as_scheduler_spec)
 
 
 @dataclasses.dataclass
@@ -166,9 +167,19 @@ class FleetEngine:
                  scheduler: Optional[ReorgScheduler] = None,
                  name: str = "fleet",
                  incremental: Optional[bool] = None):
-        if not tenants:
-            raise ValueError("a fleet needs at least one tenant")
+        if not tenants and incremental is None:
+            # An empty fleet is legal only as a router shard awaiting
+            # tenants, and then the mode cannot be inferred — requiring
+            # it explicitly keeps the bare-constructor misuse loud.
+            raise ValueError("a fleet needs at least one tenant (or an "
+                             "explicit incremental= mode for an empty "
+                             "router shard)")
         self.name = name
+        if isinstance(scheduler, SchedulerSpec):
+            # One fleet owning one instance is fine, so no deprecation
+            # here — but accepting the declarative form everywhere lets
+            # callers standardize on specs.
+            scheduler = scheduler.build()
         self.scheduler = scheduler or UnlimitedScheduler()
         self._tenants: Dict[str, LayoutEngine] = dict(tenants)
         #: Incremental fleet mode (see :mod:`repro.engine.reorg`): every
@@ -215,6 +226,12 @@ class FleetEngine:
         # Units held by in-flight incremental migrations (granted via
         # may_begin, released on migration completion).
         self._held: Dict[str, int] = {tid: 0 for tid in self._tenants}
+        # Units held by *transplanted* in-flight migrations this fleet's
+        # scheduler refused to grant at re-attach time (see add_tenant):
+        # the migration keeps moving — physical work cannot be un-begun —
+        # but completion must not release a unit that was never acquired
+        # here, so these are consumed before self._held on completion.
+        self._held_free: Dict[str, int] = {}
         # Packed decision plane for run_batched; built lazily on first use
         # and maintained incrementally from then on (tenant attach/detach
         # plus per-tenant state events), never rebuilt per tick.
@@ -238,18 +255,30 @@ class FleetEngine:
     # Dynamic tenant membership
     # ------------------------------------------------------------------
     def add_tenant(self, tenant_id: str, engine: LayoutEngine) -> None:
-        """Register a new tenant mid-flight.
+        """Register a tenant mid-flight: a fresh engine, or a transplant.
 
-        Same contract as the constructor: a fresh, ungoverned engine.  If
-        the packed plane exists it picks the tenant up incrementally (one
-        new row), not via a rebuild.
+        A *fresh* engine (not started, never governed) joins exactly as
+        at construction.  A *started* engine — one detached from another
+        fleet via :meth:`remove_tenant`, the live-migration path — is
+        **re-attached**: every charged-but-unapplied swap re-enters this
+        fleet's admission queue in charge order (charges are never
+        re-issued; α already landed at decision time, so the tenant's
+        charge ledger is untouched by the move), and an in-flight
+        incremental migration keeps its partially-summed
+        :class:`~repro.engine.reorg.executor.MigrationRecord` ledger and
+        holds one scheduler unit here (or a free hold if this scheduler
+        refuses — moves in flight cannot be un-begun).  Under
+        :class:`~repro.engine.scheduler.UnlimitedScheduler` on both
+        sides, a detach/re-attach round trip is trace-bitwise invisible.
+        A governed engine is always rejected — detach it first.
+
+        If the packed plane exists it picks the tenant up incrementally
+        (one new row), not via a rebuild.
         """
         if tenant_id in self._tenants:
             raise ValueError(f"tenant {tenant_id!r} already registered")
         if engine.governor is not None:
             raise ValueError(f"tenant {tenant_id!r}: engine already governed")
-        if engine._started:
-            raise ValueError(f"tenant {tenant_id!r}: engine already started")
         if engine.incremental != self.incremental:
             raise ValueError(
                 f"tenant {tenant_id!r}: engine incremental="
@@ -261,20 +290,67 @@ class FleetEngine:
         self._waiting_count[tenant_id] = 0
         self._granted[tenant_id] = collections.deque()
         self._held[tenant_id] = 0
+        if engine._started:
+            # Transplant: queued physical work re-enters admission here.
+            for _, sid in engine._pending_swaps:
+                self._waiting.append((tenant_id, sid))
+                self._waiting_count[tenant_id] += 1
+            executor = engine.reorg_executor
+            if executor is not None and executor.active is not None:
+                if self.scheduler.try_acquire(tenant_id):
+                    self._held[tenant_id] = 1
+                else:
+                    self._held_free[tenant_id] = \
+                        self._held_free.get(tenant_id, 0) + 1
         if self._fleet_matrix is not None:
             self._fleet_matrix.attach(tenant_id,
                                       self._batchable_matrix(tenant_id))
 
-    def remove_tenant(self, tenant_id: str) -> LayoutEngine:
-        """Deregister a tenant and return its (still usable) engine.
+    def take_inbox(self, tenant_id: str) -> List[wl.Event]:
+        """Remove and return ``tenant_id``'s queued events, in order.
 
-        Queued physical work is dropped, any in-flight grants are released
-        back to the scheduler, and the packed plane sheds the tenant's row
-        incrementally.  The returned engine keeps its trace and reverts to
-        standalone (ungoverned) Δ-delay semantics; the fleet's
-        :meth:`result` no longer includes it.
+        The live-migration handoff: the router drains these out of the
+        source shard before :meth:`remove_tenant` and replays them into
+        the target, preserving the tenant's per-event order (cross-tenant
+        interleaving is not preserved — tenants are independent).
         """
-        engine = self._tenants.pop(tenant_id)
+        taken = [ev for ev in self._inbox if ev.tenant_id == tenant_id]
+        if taken:
+            self._inbox = collections.deque(
+                ev for ev in self._inbox if ev.tenant_id != tenant_id)
+        return taken
+
+    def remove_tenant(self, tenant_id: str,
+                      finish: bool = False) -> LayoutEngine:
+        """Detach a tenant and return its (still usable) engine.
+
+        Deterministic **finish-or-transplant** semantics for physical
+        work in flight:
+
+        * Charged-but-unapplied swaps stay on the engine's own pending
+          queue (charges are decision-time and never dropped); their
+          scheduler grants are released here and re-acquired wherever the
+          engine lands next — a fleet via :meth:`add_tenant`, or
+          standalone Δ-delay semantics if never re-attached.
+        * An in-flight incremental migration either keeps migrating on
+          the engine (transplant: its held unit is released to this pool
+          and the partially-summed charge ledger travels with the
+          engine's executor), or — with ``finish=True`` — is driven to
+          completion *now*, closing the ledger bitwise on α at the
+          current index, before the engine is handed back.
+
+        Queued inbox events for the tenant must be taken first
+        (:meth:`take_inbox`); leaving them behind would crash the next
+        drain on an unknown tenant, so that is refused loudly here.
+        """
+        engine = self._tenants[tenant_id]
+        if any(ev.tenant_id == tenant_id for ev in self._inbox):
+            raise ValueError(
+                f"tenant {tenant_id!r} has queued events; take_inbox() "
+                f"them first (the router hands them to the target shard)")
+        if finish:
+            engine.finish_migration()
+        del self._tenants[tenant_id]
         if self._waiting_count.pop(tenant_id):
             self._waiting = collections.deque(
                 (t, s) for t, s in self._waiting if t != tenant_id)
@@ -284,6 +360,8 @@ class FleetEngine:
             # An in-flight migration's unit goes back to the pool; the
             # detached engine keeps migrating under its own local budget.
             self.scheduler.release(tenant_id)
+        # Free holds were never acquired from this scheduler: drop them.
+        self._held_free.pop(tenant_id, None)
         self._front_deferred.pop(tenant_id)
         if self._fleet_matrix is not None:
             self._fleet_matrix.detach(tenant_id)
@@ -339,7 +417,15 @@ class FleetEngine:
         return False
 
     def _on_complete(self, tid: str) -> None:
-        """A tenant's incremental migration finished: release its unit."""
+        """A tenant's incremental migration finished: release its unit.
+
+        Free holds (transplanted migrations this scheduler refused to
+        grant at re-attach) are consumed first and release nothing — the
+        unit was never acquired from this pool.
+        """
+        if self._held_free.get(tid, 0) > 0:
+            self._held_free[tid] -= 1
+            return
         if self._held.get(tid, 0) > 0:
             self._held[tid] -= 1
             self.scheduler.release(tid)
@@ -754,6 +840,29 @@ class FleetEngine:
         self._tick += total
         self.scheduler.tick(self._tick)
         return True
+
+    def shard_fleets(self) -> List["FleetEngine"]:
+        """The concrete fleets behind this sink: itself.
+
+        Part of the :class:`repro.engine.EventSink` surface the serving
+        tier uses to reach per-shard schedulers; a
+        :class:`repro.engine.router.FleetRouter` returns its shards.
+        """
+        return [self]
+
+    def stats(self) -> dict:
+        """Fleet counters (one shard's worth of the EventSink contract)."""
+        sched = (self.scheduler.stats()
+                 if callable(getattr(self.scheduler, "stats", None)) else {})
+        return {
+            "name": self.name,
+            "tenants": len(self._tenants),
+            "queue_depth": len(self._inbox),
+            "ticks": self._tick,
+            "swaps_deferred": self.swaps_deferred,
+            "deferred_ticks": self.deferred_ticks,
+            "scheduler": sched,
+        }
 
     def result(self, name: Optional[str] = None) -> FleetResult:
         stats = (self.scheduler.stats()

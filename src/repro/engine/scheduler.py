@@ -21,10 +21,21 @@ Schedulers are deliberately tiny state machines driven by the fleet clock
   (acquired and not yet swapped) across all tenants.
 * :class:`TokenBucketScheduler` — a refillable budget: each reorganization
   costs one token, ``rate`` tokens drip in per tick up to ``capacity``.
+
+Schedulers are *stateful* and therefore per-fleet: two shards sharing one
+instance would share its token bucket and in-flight counts, silently
+coupling budgets that must be independent.  :class:`SchedulerSpec` is the
+declarative form — ``spec.build()`` mints a fresh scheduler per shard —
+and the canonical way to configure a sharded
+:class:`repro.engine.router.FleetRouter`; passing a bare instance where a
+spec is expected still works through :func:`as_scheduler_spec`'s
+single-use deprecation shim.
 """
 from __future__ import annotations
 
-from typing import Protocol, runtime_checkable
+import dataclasses
+import warnings
+from typing import Any, Dict, Optional, Protocol, runtime_checkable
 
 
 @runtime_checkable
@@ -208,3 +219,117 @@ class TokenBucketScheduler(_StatsMixin):
         if granted > 0:
             self.tokens -= granted / self.rows_per_token
         return granted
+
+
+# ---------------------------------------------------------------------------
+# Declarative scheduler configuration (one fresh instance per shard)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec:
+    """A scheduler *recipe*: :meth:`build` mints a fresh instance.
+
+    Shards of a :class:`repro.engine.router.FleetRouter` each need their
+    own :class:`ReorgScheduler` (the instances are stateful), so the
+    router takes a spec and calls ``spec.build()`` per shard.
+    :class:`repro.engine.fleet.FleetEngine` accepts a spec anywhere it
+    accepts an instance.  Use the classmethod constructors::
+
+        SchedulerSpec.unlimited()
+        SchedulerSpec.k_concurrent(2)
+        SchedulerSpec.token_bucket(rate=0.1, capacity=4.0)
+    """
+
+    kind: str
+    params: tuple = ()          # sorted (name, value) pairs, hash-stable
+
+    @classmethod
+    def unlimited(cls) -> "SchedulerSpec":
+        return cls("unlimited")
+
+    @classmethod
+    def k_concurrent(cls, k: int = 1) -> "SchedulerSpec":
+        return cls("k_concurrent", (("k", int(k)),))
+
+    @classmethod
+    def token_bucket(cls, rate: float, capacity: float,
+                     initial: Optional[float] = None,
+                     rows_per_token: Optional[float] = None
+                     ) -> "SchedulerSpec":
+        return cls("token_bucket", (("capacity", float(capacity)),
+                                    ("initial", initial),
+                                    ("rate", float(rate)),
+                                    ("rows_per_token", rows_per_token)))
+
+    def build(self) -> ReorgScheduler:
+        kwargs: Dict[str, Any] = dict(self.params)
+        factory = _SPEC_KINDS.get(self.kind)
+        if factory is None:
+            raise ValueError(f"unknown scheduler kind {self.kind!r} "
+                             f"(one of {sorted(_SPEC_KINDS)})")
+        return factory(**kwargs)
+
+    @property
+    def name(self) -> str:
+        """The name the built scheduler will carry (for labels/results)."""
+        return self.build().name
+
+
+_SPEC_KINDS = {
+    "unlimited": UnlimitedScheduler,
+    "k_concurrent": KConcurrentScheduler,
+    "token_bucket": TokenBucketScheduler,
+}
+
+
+class _SingleUseSpec(SchedulerSpec):
+    """Deprecation shim: a live instance masquerading as a spec.
+
+    Hands out the wrapped instance exactly once — a second ``build()``
+    means two shards would share mutable scheduler state, which is the
+    bug :class:`SchedulerSpec` exists to prevent, so it raises instead.
+    """
+
+    def __init__(self, instance: ReorgScheduler):
+        object.__setattr__(self, "kind", f"instance:{instance.name}")
+        object.__setattr__(self, "params", ())
+        object.__setattr__(self, "_instance", instance)
+
+    def build(self) -> ReorgScheduler:
+        instance = object.__getattribute__(self, "_instance")
+        if instance is None:
+            raise ValueError(
+                "this ReorgScheduler instance was already handed to a "
+                "shard; schedulers are stateful and cannot be shared — "
+                "pass a SchedulerSpec so each shard builds its own")
+        object.__setattr__(self, "_instance", None)
+        return instance
+
+    @property
+    def name(self) -> str:
+        instance = object.__getattribute__(self, "_instance")
+        return self.kind if instance is None else instance.name
+
+
+def as_scheduler_spec(scheduler, warn: bool = True) -> SchedulerSpec:
+    """Coerce a spec-or-instance argument into a :class:`SchedulerSpec`.
+
+    Specs pass through; a bare :class:`ReorgScheduler` instance is
+    wrapped in a single-use spec (with a :class:`DeprecationWarning`
+    when ``warn`` — the multi-shard call sites where sharing would be a
+    real bug warn, :class:`~repro.engine.fleet.FleetEngine` itself keeps
+    accepting instances silently since one fleet owning one instance is
+    still well-defined).
+    """
+    if isinstance(scheduler, SchedulerSpec):
+        return scheduler
+    if isinstance(scheduler, ReorgScheduler):
+        if warn:
+            warnings.warn(
+                "passing a ReorgScheduler instance where a SchedulerSpec "
+                "is expected is deprecated: instances are stateful and "
+                "single-use across shards — pass e.g. "
+                "SchedulerSpec.k_concurrent(2) instead",
+                DeprecationWarning, stacklevel=3)
+        return _SingleUseSpec(scheduler)
+    raise TypeError(f"expected a SchedulerSpec or ReorgScheduler, got "
+                    f"{type(scheduler).__name__}")

@@ -1,1 +1,4 @@
-"""Launch: production meshes, dry-run driver, roofline analysis, trainers."""
+"""Launch: production meshes, dry-run driver, roofline analysis, trainers,
+and process-parallel shard hosting for the routing plane
+(:mod:`repro.launch.shard_host`; import submodules directly — this
+package stays import-light)."""

@@ -1,7 +1,10 @@
 """The serving front end: admission, load leveling, shedding, caching.
 
-:class:`ServeFrontend` is the traffic-facing tier in front of a
-:class:`repro.engine.FleetEngine`:
+:class:`ServeFrontend` is the traffic-facing tier in front of any
+:class:`repro.engine.EventSink` — a single
+:class:`repro.engine.FleetEngine` or a sharded
+:class:`repro.engine.FleetRouter` (at one shard the two are
+trace-bitwise interchangeable under the frontend):
 
 * **Bounded ingress queue** (queue-based load leveling): submitted
   events wait in a bounded deque and are dispatched in order by
@@ -36,14 +39,37 @@ import time
 from typing import Deque, Dict, Iterable, List, Optional, Tuple
 
 from repro.core import workload as wl
-from repro.engine.fleet import FleetEngine, FleetResult
+from repro.engine import EventSink
+from repro.engine.fleet import FleetResult
 
 from .admission import CircuitBreaker, TokenBucket
 from .cache import VersionedResultCache, cache_key
 
 
+class _ShedState:
+    """Overload state shared by every shard's shedding proxy.
+
+    One frontend, one breaker, one shed decision — a router's shards
+    each get their own :class:`_SheddingScheduler` (schedulers are
+    per-shard) but all of them consult and count into this one object,
+    so opening the breaker sheds reorg work fleet-wide and the counters
+    aggregate naturally.
+    """
+
+    __slots__ = ("shedding", "shed_count", "shed_attempts", "shed_tids")
+
+    def __init__(self) -> None:
+        self.shedding = False
+        #: Distinct (tenant, overload window) reorg grants refused.
+        self.shed_count = 0
+        #: Raw refused acquire attempts (the fleet re-polls waiting work
+        #: every event, so this scales with time spent shedding).
+        self.shed_attempts = 0
+        self.shed_tids: set = set()
+
+
 class _SheddingScheduler:
-    """Proxy over the fleet's scheduler; refuses grants while shedding.
+    """Proxy over one shard's scheduler; refuses grants while shedding.
 
     With ``shedding`` False the proxy is a pure delegate (same grant
     decisions, same stats, same name), so wrapping a fleet's scheduler
@@ -54,15 +80,29 @@ class _SheddingScheduler:
     work frees its unit.
     """
 
-    def __init__(self, inner):
+    def __init__(self, inner, state: Optional[_ShedState] = None):
         self.inner = inner
-        self.shedding = False
-        #: Distinct (tenant, overload window) reorg grants refused.
-        self.shed_count = 0
-        #: Raw refused acquire attempts (the fleet re-polls waiting work
-        #: every event, so this scales with time spent shedding).
-        self.shed_attempts = 0
-        self._shed_tids: set = set()
+        self.state = state if state is not None else _ShedState()
+
+    @property
+    def shedding(self) -> bool:
+        return self.state.shedding
+
+    @shedding.setter
+    def shedding(self, value: bool) -> None:
+        self.state.shedding = value
+
+    @property
+    def shed_count(self) -> int:
+        return self.state.shed_count
+
+    @property
+    def shed_attempts(self) -> int:
+        return self.state.shed_attempts
+
+    @property
+    def _shed_tids(self) -> set:
+        return self.state.shed_tids
 
     @property
     def name(self) -> str:
@@ -72,11 +112,12 @@ class _SheddingScheduler:
         self.inner.tick(now)
 
     def try_acquire(self, tenant_id: str) -> bool:
-        if self.shedding:
-            self.shed_attempts += 1
-            if tenant_id not in self._shed_tids:
-                self._shed_tids.add(tenant_id)
-                self.shed_count += 1
+        state = self.state
+        if state.shedding:
+            state.shed_attempts += 1
+            if tenant_id not in state.shed_tids:
+                state.shed_tids.add(tenant_id)
+                state.shed_count += 1
             return False
         return self.inner.try_acquire(tenant_id)
 
@@ -84,8 +125,8 @@ class _SheddingScheduler:
         self.inner.release(tenant_id)
 
     def grant_rows(self, tenant_id: str, want: int) -> int:
-        if self.shedding:
-            self.shed_attempts += 1
+        if self.state.shedding:
+            self.state.shed_attempts += 1
             return 0
         grant = getattr(self.inner, "grant_rows", None)
         if grant is None:
@@ -183,16 +224,30 @@ class ServeFrontend:
     and :meth:`result` returns the ordinary :class:`FleetResult`.
     """
 
-    def __init__(self, fleet: FleetEngine,
+    def __init__(self, fleet: EventSink,
                  config: Optional[FrontendConfig] = None):
         self.fleet = fleet
         self.config = config or FrontendConfig()
         cfg = self.config
-        if isinstance(fleet.scheduler, _SheddingScheduler):
-            self._shedder = fleet.scheduler
-        else:
-            self._shedder = _SheddingScheduler(fleet.scheduler)
-            fleet.scheduler = self._shedder
+        # One shedding proxy per shard fleet (a plain FleetEngine is its
+        # own single shard), all sharing one _ShedState so the breaker's
+        # decision and the shed counters are frontend-wide.  A shard
+        # already wrapped (stacked frontends) contributes its existing
+        # state instead of being double-wrapped.
+        shards = fleet.shard_fleets()
+        state = next((s.scheduler.state for s in shards
+                      if isinstance(s.scheduler, _SheddingScheduler)), None)
+        self._shed_state = state if state is not None else _ShedState()
+        self._shedders: List[_SheddingScheduler] = []
+        for shard in shards:
+            if isinstance(shard.scheduler, _SheddingScheduler):
+                self._shedders.append(shard.scheduler)
+            else:
+                proxy = _SheddingScheduler(shard.scheduler,
+                                           self._shed_state)
+                shard.scheduler = proxy
+                self._shedders.append(proxy)
+        self._shedder = self._shedders[0]
         if cfg.breaker_open_frac is None:
             self._breaker: Optional[CircuitBreaker] = None
         else:
@@ -406,5 +461,9 @@ class ServeFrontend:
                 "open_events": breaker.stats.open_events,
             },
             "cache": None if self._cache is None else self._cache.stats(),
-            "scheduler": self._shedder.stats(),
+            # One shard: the scheduler's own stats dict, exactly as when
+            # fronting a plain fleet; sharded: nested per shard.
+            "scheduler": (self._shedder.stats()
+                          if len(self._shedders) == 1 else
+                          {"shards": [s.stats() for s in self._shedders]}),
         }

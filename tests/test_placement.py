@@ -1,0 +1,354 @@
+"""Property tests for the routing plane's placement layer
+(repro.engine.placement).
+
+Covers the three placement invariants the router leans on — consistent-
+hash structural stability (adding/removing a shard relocates only the
+tenants whose arc moved, ~1/N of them), lookup purity in
+``(ring, overrides)``, and the ShardLoadMeter's hysteresis contract —
+plus a route → migrate → route round trip preserving per-tenant traces
+and α charge ledgers bitwise under arbitrary migration sequences.
+
+Each property runs twice, per the test_wal idiom: as a seeded
+deterministic sweep (always on, cannot flake the gate) and as a
+Hypothesis property when hypothesis is installed (derandomized under
+the CI profile registered in conftest.py).
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import build_default_layout
+from repro.core.workload import make_drift_scenario
+from repro.engine import (Decision, FleetEngine, FleetRouter,
+                          HashRing, InMemoryBackend, LayoutEngine,
+                          PartitionDirectory, RebalanceConfig,
+                          ShardLoadMeter)
+
+
+def random_shards(rng, max_shards=8):
+    n = int(rng.integers(1, max_shards + 1))
+    ids = rng.choice(40, size=n, replace=False)
+    return [f"s{i}" for i in ids]
+
+
+def random_tenants(rng, max_tenants=40):
+    n = int(rng.integers(1, max_tenants + 1))
+    return [f"tenant-{i}" for i in rng.choice(10_000, size=n,
+                                              replace=False)]
+
+
+# ---------------------------------------------------------------------------
+# HashRing: purity + structural stability (deterministic sweeps)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_ring_lookup_is_pure_sweep(seed):
+    """Two rings built from the same shard set (any insertion order)
+    agree on every key, and repeated lookups never change — placement
+    is a pure function of (key, shard set, replicas)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(10):
+        shards = random_shards(rng)
+        replicas = int(rng.integers(1, 65))
+        a = HashRing(shards, replicas=replicas)
+        b = HashRing(reversed(shards), replicas=replicas)
+        for t in random_tenants(rng):
+            assert a.lookup(t) == a.lookup(t) == b.lookup(t)
+            assert a.lookup(t) in shards
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_ring_removal_only_moves_tenants_of_removed_shard_sweep(seed):
+    rng = np.random.default_rng(10 + seed)
+    for _ in range(10):
+        shards = random_shards(rng)
+        tenants = random_tenants(rng)
+        ring = HashRing(shards)
+        before = {t: ring.lookup(t) for t in tenants}
+        victim = shards[int(rng.integers(len(shards)))]
+        ring.remove_shard(victim)
+        if len(shards) == 1:
+            with pytest.raises(ValueError):
+                ring.lookup(tenants[0])
+            continue
+        for t in tenants:
+            after = ring.lookup(t)
+            if before[t] != victim:
+                assert after == before[t]   # untouched arcs never move
+            else:
+                assert after != victim
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_ring_addition_only_moves_tenants_onto_new_shard_sweep(seed):
+    rng = np.random.default_rng(20 + seed)
+    for _ in range(10):
+        shards = random_shards(rng)
+        tenants = random_tenants(rng)
+        ring = HashRing(shards)
+        before = {t: ring.lookup(t) for t in tenants}
+        ring.add_shard("s99")
+        for t in tenants:
+            after = ring.lookup(t)
+            assert after == before[t] or after == "s99"
+    with pytest.raises(ValueError, match="already on the ring"):
+        ring.add_shard("s99")
+
+
+def test_ring_relocation_rate_is_about_one_over_n():
+    """Growing N → N+1 shards relocates ~1/(N+1) of tenants (the
+    consistent-hashing contract), never more than a small multiple of
+    it at our replica count."""
+    tenants = [f"t{i}" for i in range(2000)]
+    for n in (2, 4, 8):
+        ring = HashRing([f"s{i}" for i in range(n)])
+        before = {t: ring.lookup(t) for t in tenants}
+        ring.add_shard(f"s{n}")
+        moved = [t for t in tenants if ring.lookup(t) != before[t]]
+        frac = len(moved) / len(tenants)
+        ideal = 1.0 / (n + 1)
+        assert 0.2 * ideal <= frac <= 3.0 * ideal
+        assert all(ring.lookup(t) == f"s{n}" for t in moved)
+
+
+def test_ring_validation():
+    with pytest.raises(ValueError, match="replicas"):
+        HashRing(["s0"], replicas=0)
+    with pytest.raises(KeyError):
+        HashRing(["s0"]).remove_shard("s1")
+    assert len(HashRing(["s0", "s1"])) == 2
+    assert HashRing(["s1", "s0"]).shard_ids == ["s0", "s1"]
+
+
+def test_ring_stability_hypothesis():
+    """The removal/addition stability properties under Hypothesis-driven
+    shard sets and tenant keys."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    shard_sets = st.lists(st.integers(0, 40), min_size=2, max_size=8,
+                          unique=True).map(
+                              lambda xs: [f"s{i}" for i in xs])
+    tenant_keys = st.lists(st.text(min_size=1, max_size=12), min_size=1,
+                           max_size=40, unique=True)
+
+    @settings(max_examples=50, deadline=None)
+    @given(shards=shard_sets, tenants=tenant_keys)
+    def prop(shards, tenants):
+        ring = HashRing(shards)
+        before = {t: ring.lookup(t) for t in tenants}
+        ring.add_shard("s99")
+        assert all(ring.lookup(t) in (before[t], "s99") for t in tenants)
+        ring.remove_shard("s99")
+        assert all(ring.lookup(t) == before[t] for t in tenants)
+        victim = shards[0]
+        ring.remove_shard(victim)
+        for t in tenants:
+            if before[t] != victim:
+                assert ring.lookup(t) == before[t]
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# PartitionDirectory: overrides over the ring, pure in (ring, overrides)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_directory_lookup_pure_in_ring_and_overrides_sweep(seed):
+    rng = np.random.default_rng(30 + seed)
+    for _ in range(10):
+        shards = random_shards(rng)
+        tenants = random_tenants(rng)
+        ring = HashRing(shards)
+        k = int(rng.integers(0, min(8, len(tenants)) + 1))
+        pinned = {t: shards[int(rng.integers(len(shards)))]
+                  for t in rng.choice(tenants, size=k, replace=False)}
+        a = PartitionDirectory(ring, overrides=pinned)
+        b = PartitionDirectory(HashRing(shards), overrides=dict(pinned))
+        for t in tenants:
+            assert a.lookup(t) == b.lookup(t)
+            assert a.lookup(t) == pinned.get(t, ring.lookup(t))
+        assert a.placement(tenants) == b.placement(tenants)
+
+
+def test_directory_assign_clear_roundtrip():
+    shards = ["s0", "s1", "s2"]
+    directory = PartitionDirectory(HashRing(shards))
+    for tenant in (f"t{i}" for i in range(20)):
+        home = directory.lookup(tenant)
+        directory.assign(tenant, home)      # pinning the ring's answer
+        assert tenant not in directory.overrides
+        elsewhere = next(s for s in shards if s != home)
+        directory.assign(tenant, elsewhere)
+        assert directory.lookup(tenant) == elsewhere
+        assert directory.overrides[tenant] == elsewhere
+        directory.clear(tenant)
+        assert directory.lookup(tenant) == home
+    directory.clear("never-pinned")         # clearing nothing is a no-op
+
+
+# ---------------------------------------------------------------------------
+# ShardLoadMeter: hysteresis contract
+# ---------------------------------------------------------------------------
+
+def fill_window(meter, hot_events, cold_events):
+    for i in range(hot_events):
+        meter.observe("s0", f"t{i % 4}")
+    for i in range(cold_events):
+        meter.observe("s1", f"u{i % 4}")
+
+
+def test_meter_fires_once_then_rearms_below_low():
+    cfg = RebalanceConfig(window=64, high=1.5, low=1.1, queue_weight=0.0)
+    meter = ShardLoadMeter(["s0", "s1"], cfg)
+    assert not meter.window_complete
+    fill_window(meter, 64, 0)                   # imbalance 2.0 > high
+    assert meter.window_complete
+    tenant, hot, cold = meter.suggest()
+    assert (hot, cold) == ("s0", "s1")
+    assert tenant.startswith("t")
+    assert not meter.armed                      # disarmed after firing
+    fill_window(meter, 64, 0)                   # still skewed: no re-fire
+    assert meter.suggest() is None
+    assert not meter.armed
+    fill_window(meter, 33, 31)                  # ~balanced: below low
+    assert meter.suggest() is None              # re-arms, doesn't fire
+    assert meter.armed
+    fill_window(meter, 64, 0)                   # skew again: fires again
+    assert meter.suggest() is not None
+    assert meter.moves_suggested == 2
+    assert meter.windows_evaluated == 4
+
+
+def test_meter_refuses_move_that_relocates_the_hotspot():
+    """A single tenant hotter than the whole skew is not movable —
+    shipping it to the cold shard would just move the problem."""
+    cfg = RebalanceConfig(window=16, high=1.2, low=1.05, queue_weight=0.0)
+    meter = ShardLoadMeter(["s0", "s1"], cfg)
+    for _ in range(16):
+        meter.observe("s0", "whale")            # one tenant is all the load
+    assert meter.suggest() is None
+    assert meter.armed                          # nothing fired
+
+
+def test_meter_queue_depth_weighs_into_loads():
+    cfg = RebalanceConfig(window=8, high=1.5, low=1.1, queue_weight=2.0)
+    meter = ShardLoadMeter(["s0", "s1"], cfg)
+    for i in range(8):
+        meter.observe("s0" if i % 2 else "s1", f"t{i}")
+    meter.note_queue_depth("s0", 10)
+    assert meter.loads()["s0"] == pytest.approx(4 + 20)
+    assert meter.imbalance() > 1.5
+    stats = meter.stats()
+    assert stats["windows_evaluated"] == 0
+    assert stats["armed"] is True
+
+
+def test_rebalance_config_validation():
+    with pytest.raises(ValueError, match="hysteresis"):
+        RebalanceConfig(high=1.1, low=1.2)
+    with pytest.raises(ValueError, match="window"):
+        RebalanceConfig(window=0)
+
+
+# ---------------------------------------------------------------------------
+# Route → migrate → route: the α ledger survives arbitrary re-homing
+# ---------------------------------------------------------------------------
+
+class _EveryKPolicy:
+    """Charges a reorganization between two layouts every ``k`` queries."""
+
+    name = "EveryK"
+
+    def __init__(self, layouts_, k):
+        self.layouts = list(layouts_)
+        self.k = k
+        self.alpha = 1.0
+        self.cur = 0
+
+    def bind(self, backend):
+        for lay in self.layouts:
+            backend.register(lay)
+        return self.layouts[0].layout_id
+
+    def decide(self, index, query, backend):
+        if (index + 1) % self.k == 0:
+            self.cur = 1 - self.cur
+            return Decision(state=self.layouts[self.cur].layout_id,
+                            reorg=True)
+        return Decision(state=self.layouts[self.cur].layout_id)
+
+    def info(self):
+        return {}
+
+
+def _small_engine(seed):
+    data = np.random.default_rng(seed).uniform(0, 100, size=(600, 4))
+    lays = [build_default_layout(0, data, 4, sort_col=0),
+            build_default_layout(1, data, 4, sort_col=1)]
+    return LayoutEngine(_EveryKPolicy(lays, 7), InMemoryBackend(data),
+                        delta=3, incremental=True, rows_per_tick=50)
+
+
+TENANTS = [f"t{i}" for i in range(4)]
+
+
+def roundtrip_matches_unsharded(moves, qpt):
+    """Run one migration sequence through a 3-shard router and compare
+    every trace + ledger bitwise against the unsharded fleet."""
+    lo, hi = np.zeros(4), np.full(4, 100.0)
+    fs = make_drift_scenario("sudden_shift", lo, hi, num_tenants=4,
+                             queries_per_tenant=qpt, seed=13)
+    events = list(fs)
+
+    ref = FleetEngine({t: _small_engine(i) for i, t in enumerate(TENANTS)})
+    ref.run(events)
+
+    router = FleetRouter({t: _small_engine(i)
+                          for i, t in enumerate(TENANTS)}, num_shards=3)
+    chunk = max(1, len(events) // (len(moves) + 1))
+    step = 0
+    for ti, si in moves:
+        for ev in events[step:step + chunk]:
+            router.submit(ev)
+        router.drain()
+        step += chunk
+        router.migrate_tenant(TENANTS[ti], f"s{si}")
+    for ev in events[step:]:
+        router.submit(ev)
+    router.drain()
+
+    for i, t in enumerate(TENANTS):
+        a, b = ref.tenant(t), router.tenant(t)
+        ra, rb = a.result(), b.result()
+        assert np.array_equal(ra.query_costs, rb.query_costs)
+        assert ra.reorg_indices == rb.reorg_indices
+        assert [m.charges for m in a.reorg_executor.migrations] \
+            == [m.charges for m in b.reorg_executor.migrations]
+
+
+def test_route_migrate_route_roundtrip_sweep():
+    """Deterministic sweep: single moves, ping-pong pairs, and a long
+    every-tenant shuffle all preserve traces and ledgers bitwise."""
+    for moves in ([(0, 1)],
+                  [(0, 1), (0, 2)],               # ping-pong one tenant
+                  [(0, 1), (1, 1), (2, 0)],
+                  list(itertools.product(range(4), (1,)))):
+        roundtrip_matches_unsharded(moves, qpt=21)
+
+
+def test_route_migrate_route_roundtrip_hypothesis():
+    """The same round trip under Hypothesis-driven move sequences."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(moves=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2)),
+                          min_size=1, max_size=5),
+           qpt=st.integers(7, 28))
+    def prop(moves, qpt):
+        roundtrip_matches_unsharded(moves, qpt)
+
+    prop()
