@@ -10,7 +10,7 @@ BENCH_DIR ?= .bench
         bench-reorg-gate bench-ingest-smoke bench-ingest-gate \
         bench-kernels-smoke bench-kernels-gate bench-serving-smoke \
         bench-serving-gate bench-router-smoke bench-router-gate \
-        quickstart install
+        bench-forecast-smoke bench-forecast-gate quickstart install
 
 install:
 	pip install -r requirements.txt
@@ -42,6 +42,7 @@ bench-full:
 	$(PYTHON) benchmarks/bench_kernels.py --out $(BENCH_DIR)/BENCH_kernels.json
 	$(PYTHON) benchmarks/bench_serving.py --out $(BENCH_DIR)/BENCH_serving.json
 	$(PYTHON) benchmarks/bench_router.py --out $(BENCH_DIR)/BENCH_router.json
+	$(PYTHON) benchmarks/bench_forecast.py --out $(BENCH_DIR)/BENCH_forecast.json
 
 bench-smoke:
 	mkdir -p $(BENCH_DIR)
@@ -91,6 +92,13 @@ bench-router-smoke:
 
 bench-router-gate: bench-router-smoke
 	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_router_smoke.json --baseline BENCH_router.json
+
+bench-forecast-smoke:
+	mkdir -p $(BENCH_DIR)
+	$(PYTHON) benchmarks/bench_forecast.py --smoke --out $(BENCH_DIR)/bench_forecast_smoke.json
+
+bench-forecast-gate: bench-forecast-smoke
+	$(PYTHON) benchmarks/check_regression.py --fresh $(BENCH_DIR)/bench_forecast_smoke.json --baseline BENCH_forecast.json
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -35,7 +35,14 @@ benchmark families:
   router's critical-path throughput (total events over the slowest
   shard's individually-timed drain) at N shards divided by the 1-shard
   router (section ``router_scaling``; routing overhead creep or a
-  placement bug collapsing tenants onto one shard drags it down).
+  placement bug collapsing tenants onto one shard drags it down);
+* ``bench_forecast.py --smoke`` vs ``BENCH_forecast.json`` — the
+  combined query+reorg cost of the reactive OREO fleet divided by the
+  forecast-wrapped fleet over every drift and ingest scenario (section
+  ``forecast_vs_reactive``; ratio > 1 means the predictive plane is
+  paying off, and a drop means either the forecasters stopped firing
+  where they should or the α-safety clamp stopped containing the
+  damage where they shouldn't).
 
 Raw queries/sec are not comparable across machines, so the gate checks
 **ratios**, both sides measured in the same process on the same runner:
@@ -73,7 +80,8 @@ import sys
 SECTIONS = ("speedup_vs_reference", "speedup_batched_vs_loop",
             "cost_ratio_atomic_over_incremental",
             "cost_ratio_vs_debt_aware", "fused_vs_separate",
-            "serving_qps_ratio", "router_scaling")
+            "serving_qps_ratio", "router_scaling",
+            "forecast_vs_reactive")
 #: Ceiling-gated sections: smaller is better (latency tails), the gate
 #: fails when a ratio rises above (1 + tolerance) * baseline.
 CEILING_SECTIONS = ("latency_tail",)
@@ -81,7 +89,7 @@ CEILING_SECTIONS = ("latency_tail",)
 #: grids win over the top-level (full-sweep) numbers for shared keys.
 SMOKE_SECTIONS = ("smoke_baseline", "fleet_smoke", "reorg_smoke",
                   "ingest_smoke", "kernels_smoke", "serving_smoke",
-                  "router_smoke")
+                  "router_smoke", "forecast_smoke")
 
 
 def load_grids(payload: dict, sections, prefer_smoke: bool) -> dict:

@@ -101,15 +101,22 @@ class DynamicUMTS:
     # ------------------------------------------------------------------
     # State-management queries (the D in D-UMTS)
     # ------------------------------------------------------------------
-    def add_state(self, state_id: int) -> None:
+    def add_state(self, state_id: int,
+                  admission: Optional[str] = None) -> None:
         """Add a state (Algorithm 4, line 12).
 
         ``defer`` mode parks it until the next phase; ``median`` mode (§IV-C)
         admits it into the running phase with a median-initialized counter.
+        ``admission`` overrides the instance-wide mode for this one state —
+        predictive growers defer their speculative states to the next phase
+        (a fresh state is a preferred jump target, so mid-phase admission
+        would pull exploratory jumps toward a layout built for a regime
+        that hasn't arrived yet) while manager-driven additions keep the
+        configured behavior.
         """
         if state_id in self.states or state_id in self.pending_additions:
             return
-        if self.midphase_admission == "defer":
+        if (admission or self.midphase_admission) == "defer":
             self.pending_additions.add(state_id)
         else:
             active_costs = [self.counters[s] for s in self.active]
@@ -138,6 +145,25 @@ class DynamicUMTS:
             self._reset_phase(reason="state_deleted")
         if state_id == self.current_state:
             self._jump(reason="state_deleted")
+
+    def force_move(self, state_id: int, reason: str = "preposition") -> None:
+        """Deterministically move the decision maker to an active state.
+
+        The hook behind predictive pre-positioning
+        (:class:`repro.forecast.policy.ForecastPolicy`): the caller pays the
+        usual movement cost α for the emitted event; counters, phases and
+        the rng stream are untouched, so a wrapper that never calls this is
+        bitwise indistinguishable from the bare D-UMTS.  Moving to the
+        current state is a no-op (no event, nothing charged).
+        """
+        if state_id not in self.active:
+            raise ValueError(f"cannot force-move to inactive state "
+                             f"{state_id} (active: {sorted(self.active)})")
+        if state_id == self.current_state:
+            return
+        self.events.append(MTSEvent(self.query_idx, self.current_state,
+                                    state_id, reason))
+        self.current_state = state_id
 
     # ------------------------------------------------------------------
     # Query processing

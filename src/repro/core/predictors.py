@@ -5,6 +5,11 @@ skipped in the *previous phase* and biases the jump distribution as
 P(s) ∝ w_s^gamma.  gamma=0 recovers the uniform BLS transition; gamma>0
 favors recently-good states, which empirically cuts reorganization cost by
 ~17-28% (Table II) without hurting query cost.
+
+These are *transition* predictors — they bias where D-UMTS jumps once a
+counter fills.  The *workload* predictors that forecast what the next
+horizon of queries will look like (and pre-position moves ahead of the
+drift) grew into their own subsystem: :mod:`repro.forecast`.
 """
 from __future__ import annotations
 

@@ -240,10 +240,75 @@ class FleetStream:
 DRIFT_SCENARIOS: Dict[str, Callable[..., FleetStream]] = {}
 
 
-def drift_scenario(name: str):
-    """Register a named multi-tenant drift-scenario generator."""
+@dataclasses.dataclass(frozen=True)
+class ScenarioInfo:
+    """Ground-truth drift parameters of a registered scenario.
+
+    Declared at registration next to the generator, so benchmarks can
+    report forecast accuracy against what the scenario *actually does*
+    (period, drift rate, shift window) instead of re-deriving it from the
+    stream.  All tick-valued quantities are expressed as fractions of a
+    tenant's stream (scenarios scale with ``queries_per_tenant``); use
+    :meth:`period_ticks` for the absolute cycle length.
+
+    ``forecastable`` marks scenarios whose structure a workload
+    forecaster can exploit in principle (recurring or smoothly drifting
+    mixtures).  A one-shot jump is *detectable* after the fact but not
+    predictable before it, so ``sudden_shift`` and friends are False.
+    """
+
+    name: str
+    family: str                     # "drift" | "ingest"
+    forecastable: bool = False
+    #: Cyclic scenarios: templates per cycle / cycles per stream.
+    num_phases: Optional[int] = None
+    cycles: Optional[int] = None
+    #: One-shot shifts: the (lo, hi) fraction window the shift tick is
+    #: drawn from per tenant.
+    shift_window: Optional[Tuple[float, float]] = None
+    #: Gradual drift: fraction of the stream the mixture slides over.
+    drift_span: Optional[float] = None
+    #: Flash crowd: burst start fraction and burst length fraction.
+    burst_start: Optional[float] = None
+    burst_fraction: Optional[float] = None
+    #: Template churn: fresh-template segments per stream.
+    num_segments: Optional[int] = None
+
+    def period_ticks(self, queries_per_tenant: int) -> Optional[int]:
+        """Per-tenant cycle length in queries, if the scenario cycles."""
+        if self.num_phases is None or self.cycles is None:
+            return None
+        block = max(queries_per_tenant // (self.num_phases * self.cycles), 1)
+        return self.num_phases * block
+
+    def drift_rate(self, queries_per_tenant: int) -> Optional[float]:
+        """Mixture-share change per query, if the scenario drifts."""
+        if self.drift_span is None:
+            return None
+        span = self.drift_span * max(queries_per_tenant - 1, 1)
+        return 1.0 / span
+
+
+#: name -> ScenarioInfo for every registered scenario (drift and ingest).
+SCENARIO_INFO: Dict[str, ScenarioInfo] = {}
+
+
+def forecastable_scenarios() -> List[str]:
+    """Names of registered scenarios a forecaster can exploit."""
+    return sorted(n for n, i in SCENARIO_INFO.items() if i.forecastable)
+
+
+def drift_scenario(name: str, forecastable: bool = False, **meta):
+    """Register a named multi-tenant drift-scenario generator.
+
+    Keyword metadata lands in :data:`SCENARIO_INFO` as a
+    :class:`ScenarioInfo` — the ground truth benchmark reports compare
+    forecasts against.
+    """
     def deco(fn):
         DRIFT_SCENARIOS[name] = fn
+        SCENARIO_INFO[name] = ScenarioInfo(name=name, family="drift",
+                                           forecastable=forecastable, **meta)
         fn.scenario_name = name
         return fn
     return deco
@@ -319,7 +384,7 @@ def _scenario_rngs(seed: int, num_tenants: int) -> List[np.random.Generator]:
     return [np.random.default_rng(s) for s in root.spawn(num_tenants)]
 
 
-@drift_scenario("sudden_shift")
+@drift_scenario("sudden_shift", shift_window=(0.35, 0.65))
 def sudden_shift(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 4,
                  queries_per_tenant: int = 2000, seed: int = 0,
                  ) -> FleetStream:
@@ -341,7 +406,7 @@ def sudden_shift(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 4,
                        per_tenant)
 
 
-@drift_scenario("gradual_drift")
+@drift_scenario("gradual_drift", forecastable=True, drift_span=1.0)
 def gradual_drift(col_lo: np.ndarray, col_hi: np.ndarray,
                   num_tenants: int = 4, queries_per_tenant: int = 2000,
                   seed: int = 0) -> FleetStream:
@@ -372,7 +437,8 @@ def gradual_drift(col_lo: np.ndarray, col_hi: np.ndarray,
                        per_tenant)
 
 
-@drift_scenario("cyclic_diurnal")
+@drift_scenario("cyclic_diurnal", forecastable=True, num_phases=3,
+                cycles=4)
 def cyclic_diurnal(col_lo: np.ndarray, col_hi: np.ndarray,
                    num_tenants: int = 4, queries_per_tenant: int = 2000,
                    seed: int = 0, num_phases: int = 3, cycles: int = 4,
@@ -403,7 +469,7 @@ def cyclic_diurnal(col_lo: np.ndarray, col_hi: np.ndarray,
                        per_tenant)
 
 
-@drift_scenario("flash_crowd")
+@drift_scenario("flash_crowd", burst_start=0.4, burst_fraction=0.15)
 def flash_crowd(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 4,
                 queries_per_tenant: int = 2000, seed: int = 0,
                 burst_tenant: int = 0, burst_frac: float = 0.15,
@@ -443,7 +509,7 @@ def flash_crowd(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 4,
                        per_tenant)
 
 
-@drift_scenario("template_churn")
+@drift_scenario("template_churn", num_segments=6)
 def template_churn(col_lo: np.ndarray, col_hi: np.ndarray,
                    num_tenants: int = 4, queries_per_tenant: int = 2000,
                    seed: int = 0, num_segments: int = 6) -> FleetStream:
@@ -531,10 +597,13 @@ class IngestStream:
 INGEST_SCENARIOS: Dict[str, Callable[..., IngestStream]] = {}
 
 
-def ingest_scenario(name: str):
-    """Register a named mixed read/write scenario generator."""
+def ingest_scenario(name: str, forecastable: bool = False, **meta):
+    """Register a named mixed read/write scenario generator (metadata
+    lands in :data:`SCENARIO_INFO`, exactly like :func:`drift_scenario`)."""
     def deco(fn):
         INGEST_SCENARIOS[name] = fn
+        SCENARIO_INFO[name] = ScenarioInfo(name=name, family="ingest",
+                                           forecastable=forecastable, **meta)
         fn.scenario_name = name
         return fn
     return deco
@@ -643,7 +712,7 @@ def append_heavy(col_lo: np.ndarray, col_hi: np.ndarray,
                         per_tenant)
 
 
-@ingest_scenario("mixed_rw")
+@ingest_scenario("mixed_rw", shift_window=(0.4, 0.6))
 def mixed_rw(col_lo: np.ndarray, col_hi: np.ndarray, num_tenants: int = 3,
              queries_per_tenant: int = 1500, seed: int = 0,
              every: int = 8, batch_rows: int = 50) -> IngestStream:

@@ -69,6 +69,11 @@ Layers:
   :class:`DiskBackend`, ``durable=True`` adds a crash-safe manifest WAL
   (:class:`repro.data.wal.ManifestWAL`) that replays interrupted
   ingest/migration to a bitwise-identical manifest.
+* :mod:`repro.forecast` — the predictive decision plane:
+  :class:`ForecastPolicy` wraps :class:`OreoPolicy` with workload
+  forecasting (period detection + EWMA trend), online qd-tree state
+  growth through the StateMatrix dynamic-state events, and α-safe
+  pre-positioning moves hard-clamped to the reactive OREO envelope.
 * :class:`FleetMatrix` — the packed multi-tenant decision plane behind
   :meth:`FleetEngine.run_batched`: every tenant's StateMatrix stacked
   into one ``(T, S_max, P_max, C)`` tensor family, maintained
@@ -98,6 +103,16 @@ from repro.engine.scheduler import (KConcurrentScheduler, ReorgScheduler,
                                     SchedulerSpec, TokenBucketScheduler,
                                     UnlimitedScheduler, as_scheduler_spec)
 from repro.engine.state_matrix import StateMatrix
+
+
+def __getattr__(name: str):
+    # PEP 562: the predictive plane (repro.forecast) wraps OreoPolicy and
+    # imports Decision from repro.engine.policies, so its re-export here
+    # must be lazy to keep either import order cycle-free.
+    if name in ("ForecastPolicy", "ForecastConfig"):
+        from repro import forecast as _forecast
+        return getattr(_forecast, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @runtime_checkable
@@ -138,7 +153,8 @@ __all__ = [
     "DebtMeter", "Decision", "DeltaBatch", "DeltaLog", "DiskBackend",
     "Event", "EventSink", "FleetEngine", "FleetMatrix", "FleetResult",
     "FleetRouter",
-    "FleetStepResult", "GreedyPolicy", "HashRing", "InMemoryBackend",
+    "FleetStepResult", "ForecastConfig", "ForecastPolicy", "GreedyPolicy",
+    "HashRing", "InMemoryBackend",
     "IngestConfig",
     "IngestEvent", "KConcurrentScheduler", "LayoutEngine",
     "MTSOptimalPolicy", "MicroMove",

@@ -6,6 +6,13 @@ decisions into physical actions against a :class:`StorageBackend`.  OREO and
 every method of comparison from the paper (§VI-A3, §VI-C) are expressed as
 policies over the *same* shared loop — the per-method run loops that used to
 live in ``repro.core.baselines`` are gone.
+
+The predictive wrapper (:class:`repro.forecast.policy.ForecastPolicy`,
+which pre-positions α-charged moves ahead of forecasted drift and grows
+the qd-tree state space online) lives in :mod:`repro.forecast` and is
+re-exported here lazily — it wraps an :class:`OreoPolicy` and imports
+:class:`Decision` from this module, so a top-level import would be
+circular.
 """
 from __future__ import annotations
 
@@ -420,6 +427,15 @@ class MTSOptimalPolicy:
             "max_state_space": self.dumts.max_state_space,
             "competitive_bound": self.dumts.competitive_bound(),
         }
+
+
+def __getattr__(name: str):
+    # PEP 562: lazy re-export of the predictive plane (avoids the
+    # forecast -> policies -> forecast import cycle).
+    if name in ("ForecastPolicy", "ForecastConfig"):
+        from repro import forecast as _forecast
+        return getattr(_forecast, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class OfflineOptimalPolicy:

@@ -224,6 +224,19 @@ class StateMatrix:
         self._totals.pop()
         self._rows_exact.pop()
         self._n = last
+        # Wipe the vacated slot back to the identity fill values.  Every
+        # reader slices [:n], so stale bounds were latent — but a later
+        # register that reuses the slot for a *narrower* state relies on
+        # register() overwriting [p:] tails, and the FleetMatrix mirror
+        # wipes its twin slot; keeping the source plane identical under
+        # grower-driven register/deregister churn keeps plane snapshots
+        # byte-comparable.
+        self._mins[last] = np.inf
+        self._maxs[last] = -np.inf
+        self._minsT[:, last] = np.inf
+        self._maxsT[:, last] = -np.inf
+        self._rows[last] = 0.0
+        self._totals_arr[last] = 1.0
         self._refresh_uniform()
         self.version += 1
         for listener in self._listeners:

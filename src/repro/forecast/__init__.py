@@ -1,0 +1,33 @@
+"""The predictive decision plane: forecast → grow → pre-position.
+
+Dataflow (each layer optional and independently testable)::
+
+    per-tenant query stream
+        │ observe
+        ▼
+    EwmaMixtureForecaster ──────────► Forecast (key, queries, dwell)
+    (period detector + EWMA trend)        │                │
+                                          ▼                ▼
+                              QdTreeGrower.propose   ForecastPolicy
+                              (online state growth)  (α-safe pre-position)
+                                          │                │
+                                          ▼                ▼
+                          StateMatrix register/      DynamicUMTS.force_move
+                          deregister events          + α-charged Δ-delayed
+                          (FleetMatrix mirrors,      reorg through the
+                          fused-kernel planes,       engine/governor path
+                          serve caches stay exact)
+
+Everything here is pure, deterministic and picklable; the reactive OREO
+envelope is the safety net (see :class:`ForecastPolicy`'s clamp).
+"""
+from .grower import GROWN_ID_BASE, QdTreeGrower, grown_ids
+from .policy import ForecastConfig, ForecastPolicy
+from .predictors import (AdversarialForecaster, EwmaMixtureForecaster,
+                         Forecast, PeriodDetector, template_key)
+
+__all__ = [
+    "AdversarialForecaster", "EwmaMixtureForecaster", "Forecast",
+    "ForecastConfig", "ForecastPolicy", "GROWN_ID_BASE", "PeriodDetector",
+    "QdTreeGrower", "grown_ids", "template_key",
+]

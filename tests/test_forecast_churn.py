@@ -1,0 +1,197 @@
+"""Grower-driven dynamic-state churn: plane hygiene + golden traces.
+
+Three layers of the same contract — mid-run state growth and retirement
+must be invisible to every mirror of the decision plane:
+
+* ``StateMatrix.deregister`` leaves no stale payload in the vacated slot
+  (swap-with-last wipes the tail back to identity fills), and
+  ``FleetMatrix`` transposed twins track arbitrary register/deregister
+  churn slot for slot.
+* Fleet traces with :class:`repro.forecast.ForecastPolicy` growing and
+  retiring qd-tree states mid-stream are bit-identical between the
+  stepwise loop and ``run_batched`` — including the ``pallas_fused``
+  megakernel backend — across every drift scenario and scheduler (the
+  primed-estimate fallback must survive plane-version bumps caused by
+  mid-decide registration).
+"""
+import numpy as np
+import pytest
+
+from repro.core import OreoConfig, build_default_layout, layouts, \
+    make_generator
+from repro.core import layout_manager as lm
+from repro.core.workload import make_drift_scenario
+from repro.engine import (FleetEngine, FleetMatrix, InMemoryBackend,
+                          KConcurrentScheduler, LayoutEngine, OreoPolicy,
+                          StateMatrix, TokenBucketScheduler,
+                          UnlimitedScheduler)
+from repro.forecast import ForecastConfig, ForecastPolicy, QdTreeGrower, \
+    grown_ids
+
+
+def make_meta(rng, partitions, columns, rows_per=40):
+    data = rng.uniform(0, 100, size=(partitions * rows_per, columns))
+    assignment = np.repeat(np.arange(partitions), rows_per)
+    return layouts.metadata_from_assignment(data, assignment, partitions)
+
+
+# ---------------------------------------------------------------------------
+# StateMatrix slot hygiene under deregistration
+# ---------------------------------------------------------------------------
+
+def test_deregister_wipes_vacated_slot():
+    """After swap-with-last removal the tail slot must hold identity
+    fills, not the payload of the state that used to live there — a
+    later register into that slot with fewer partitions would otherwise
+    inherit stale bounds rows beyond its own partition count."""
+    rng = np.random.default_rng(0)
+    sm = StateMatrix()
+    for sid, p in [(1, 4), (2, 8), (3, 6)]:
+        sm.register(sid, make_meta(rng, p, 3))
+    sm.deregister(2)                      # 3 swaps into slot 1
+    vac = len(sm)                         # the vacated tail slot
+    assert np.all(np.isinf(sm._mins[vac]))
+    assert np.all(sm._mins[vac] > 0)
+    assert np.all(np.isinf(sm._maxs[vac]))
+    assert np.all(sm._maxs[vac] < 0)
+    assert np.all(np.isinf(sm._minsT[:, vac]))
+    assert np.all(np.isinf(sm._maxsT[:, vac]))
+    assert np.all(sm._rows[vac] == 0.0)
+    assert np.all(sm._totals_arr[vac] == 1.0)
+
+
+def test_fleet_mirror_tracks_random_register_deregister_churn():
+    """Stale slot-map audit: arbitrary interleaved register/deregister
+    churn across tenants keeps every FleetMatrix twin (row-major and
+    transposed) equal to the local plane, slot for slot."""
+    rng = np.random.default_rng(7)
+    fm = FleetMatrix()
+    sms = {tid: StateMatrix() for tid in ("a", "b", "c")}
+    for tid, sm in sms.items():
+        fm.attach(tid, sm)
+    next_sid = 0
+    for _ in range(200):
+        tid = ("a", "b", "c")[int(rng.integers(3))]
+        sm = sms[tid]
+        if len(sm) and rng.uniform() < 0.4:
+            sm.deregister(sm.state_ids[int(rng.integers(len(sm)))])
+        else:
+            sm.register(next_sid, make_meta(rng, int(rng.integers(2, 9)), 3))
+            next_sid += 1
+    for tid, sm in sms.items():
+        assert fm.state_ids(tid) == sm.state_ids
+        row = fm.tenant_row(tid)
+        for sid in sm.state_ids:
+            slot = sm.slot(sid)
+            assert fm.slot(tid, sid) == slot
+            meta = sm.metadata(sid)
+            p = meta.num_partitions
+            np.testing.assert_array_equal(
+                fm._mins[row, slot, :p], meta.mins)
+            np.testing.assert_array_equal(
+                fm._maxs[row, slot, :p], meta.maxs)
+            np.testing.assert_array_equal(
+                fm._minsT[:, row, slot, :p], meta.mins.T)
+            np.testing.assert_array_equal(
+                fm._maxsT[:, row, slot, :p], meta.maxs.T)
+            assert np.all(np.isinf(fm._mins[row, slot, p:]))
+        # slots past the live count are identity-filled in the mirror too
+        assert np.all(np.isinf(fm._mins[row, len(sm):]))
+
+
+# ---------------------------------------------------------------------------
+# Golden loop vs batched traces with mid-stream growth + retirement
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tenant_data():
+    return {f"t{t}": np.random.default_rng(100 + t).uniform(
+        0, 100, size=(3_000, 6)) for t in range(3)}
+
+
+@pytest.fixture(scope="module")
+def bounds(tenant_data):
+    lo = np.min([d.min(0) for d in tenant_data.values()], axis=0)
+    hi = np.max([d.max(0) for d in tenant_data.values()], axis=0)
+    return lo, hi
+
+
+def forecast_engine(data, alpha=10.0, delta=5, seed=2):
+    """An engine whose policy grows and retires qd-tree states eagerly:
+    lax admission (alpha=0 grower, zero gain/floor, period forecasts
+    eligible), one-deep grown pool and a short retirement window so
+    register *and* deregister churn both land mid-stream."""
+    gen = make_generator("qdtree")
+    cfg = OreoConfig(alpha=alpha, seed=seed, delta=delta,
+                     manager=lm.LayoutManagerConfig(target_partitions=8,
+                                                    window_size=60,
+                                                    gen_every=30))
+    inner = OreoPolicy(data, build_default_layout(0, data, 8), gen, cfg)
+    fc = ForecastConfig(grow=True, max_grown=1, grow_retire_after=30,
+                        grow_sources=("period", "trend", "adversarial"))
+    grower = QdTreeGrower(data, 8, min_queries=4, gain=0.0, cost_floor=0.0,
+                          alpha=0.0, seed=seed + 101)
+    policy = ForecastPolicy(inner, config=fc, grower=grower)
+    return LayoutEngine(policy, InMemoryBackend(data), delta=cfg.delta)
+
+
+SCHEDULERS = [
+    ("unlimited", UnlimitedScheduler),
+    ("k1", lambda: KConcurrentScheduler(1)),
+    ("bucket", lambda: TokenBucketScheduler(rate=0.01, capacity=1.0,
+                                            initial=0.0)),
+]
+
+ALL_SCENARIOS = ["sudden_shift", "gradual_drift", "cyclic_diurnal",
+                 "flash_crowd", "template_churn"]
+
+
+def _assert_identical(fs, r_loop, r_batched):
+    for tid in fs.tenant_ids:
+        a, b = r_loop.per_tenant[tid], r_batched.per_tenant[tid]
+        assert np.array_equal(a.query_costs, b.query_costs)
+        assert a.reorg_indices == b.reorg_indices
+        assert np.array_equal(a.state_seq, b.state_seq)
+        assert a.info.get("grown_admitted") == b.info.get("grown_admitted")
+        assert a.info.get("prepositions") == b.info.get("prepositions")
+    assert r_loop.swaps_deferred == r_batched.swaps_deferred
+    assert r_loop.deferred_ticks == r_batched.deferred_ticks
+    assert r_loop.scheduler_stats.get("grants") \
+        == r_batched.scheduler_stats.get("grants")
+
+
+@pytest.mark.parametrize("compute", ["numpy", "pallas_fused"])
+@pytest.mark.parametrize("scenario", ALL_SCENARIOS)
+def test_grower_churn_batched_bit_identical_to_loop(scenario, compute,
+                                                    tenant_data, bounds):
+    lo, hi = bounds
+    for _, factory in SCHEDULERS:
+        fs = make_drift_scenario(scenario, lo, hi, num_tenants=3,
+                                 queries_per_tenant=120, seed=7)
+        loop = FleetEngine({tid: forecast_engine(tenant_data[tid])
+                            for tid in fs.tenant_ids}, factory())
+        r_loop = loop.run(fs)
+        batched = FleetEngine({tid: forecast_engine(tenant_data[tid])
+                               for tid in fs.tenant_ids}, factory())
+        r_batched = batched.run_batched(fs, compute=compute)
+        _assert_identical(fs, r_loop, r_batched)
+
+
+def test_grower_churn_actually_churns(tenant_data, bounds):
+    """The golden tests above are vacuous if no state ever grows or
+    retires mid-run; pin that the lax config really churns the plane."""
+    lo, hi = bounds
+    fs = make_drift_scenario("cyclic_diurnal", lo, hi, num_tenants=3,
+                             queries_per_tenant=120, seed=7)
+    engines = {tid: forecast_engine(tenant_data[tid])
+               for tid in fs.tenant_ids}
+    fleet = FleetEngine(engines, UnlimitedScheduler())
+    res = fleet.run(fs)
+    admitted = sum(res.per_tenant[t].info["grown_admitted"]
+                   for t in fs.tenant_ids)
+    assert admitted > 0
+    # at least one grown state was deregistered again mid-run (FIFO
+    # eviction or idle retirement), so deregister paths were exercised
+    live = sum(len(grown_ids(engines[t].policy.inner.dumts.states))
+               for t in fs.tenant_ids)
+    assert live < admitted

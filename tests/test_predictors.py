@@ -1,0 +1,78 @@
+"""Unit tests for the seed transition predictors (repro.core.predictors).
+
+The *workload* forecasters that grew out of this module live in
+``repro.forecast`` and are covered by ``tests/test_forecast.py``; these
+tests pin the transition-plane helpers the D-UMTS consumes directly.
+"""
+import pickle
+
+import pytest
+
+from repro.core import mts
+from repro.core.predictors import (GammaBiasedTransition,
+                                   gamma_biased_transition,
+                                   median_initialized_counter)
+
+
+# ---------------------------------------------------------------------------
+# median_initialized_counter (§IV-C mid-phase admission)
+# ---------------------------------------------------------------------------
+
+def test_median_empty_is_zero():
+    assert median_initialized_counter({}) == 0.0
+
+
+def test_median_odd_count_is_middle_value():
+    assert median_initialized_counter({1: 0.2, 2: 0.9, 3: 0.4}) == 0.4
+
+
+def test_median_even_count_is_midpoint():
+    assert median_initialized_counter({1: 0.2, 2: 0.8}) == pytest.approx(0.5)
+
+
+def test_median_ignores_key_order():
+    a = median_initialized_counter({1: 0.7, 2: 0.1, 3: 0.3, 4: 0.5})
+    b = median_initialized_counter({4: 0.5, 3: 0.3, 2: 0.1, 1: 0.7})
+    assert a == b == pytest.approx(0.4)
+
+
+# ---------------------------------------------------------------------------
+# GammaBiasedTransition
+# ---------------------------------------------------------------------------
+
+def test_gamma_zero_recovers_uniform():
+    w = {1: 0.9, 2: 0.1, 3: 0.5}
+    assert GammaBiasedTransition(0.0)(w) == mts.uniform_transition(w)
+
+
+def test_distribution_normalizes_and_orders_by_weight():
+    probs = GammaBiasedTransition(2.0)({1: 0.9, 2: 0.1, 3: 0.5})
+    assert sum(probs.values()) == pytest.approx(1.0)
+    assert probs[1] > probs[3] > probs[2]
+
+
+def test_zero_weight_is_floored_not_excluded():
+    """States with weight 0 (full scan last phase) keep a tiny positive
+    probability — the floor guards the power, it does not drop states."""
+    probs = GammaBiasedTransition(1.0)({1: 0.0, 2: 1.0})
+    assert probs[1] > 0.0
+    assert sum(probs.values()) == pytest.approx(1.0)
+
+
+def test_higher_gamma_sharpens_the_bias():
+    w = {1: 0.9, 2: 0.3}
+    soft = GammaBiasedTransition(1.0)(w)
+    sharp = GammaBiasedTransition(4.0)(w)
+    assert sharp[1] > soft[1]
+
+
+def test_transition_pickles():
+    fn = gamma_biased_transition(1.5)
+    clone = pickle.loads(pickle.dumps(fn))
+    w = {1: 0.9, 2: 0.1}
+    assert clone(w) == fn(w)
+    assert clone.gamma == 1.5
+
+
+def test_factory_returns_callable_class_instance():
+    assert isinstance(gamma_biased_transition(0.7), GammaBiasedTransition)
